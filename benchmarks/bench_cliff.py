@@ -1,0 +1,46 @@
+"""Paper Fig. 6 / Sec. 3.3.1: the performance cliff & critical combination.
+
+Part-bit quality (layer output fidelity + model top-1 agreement) versus
+nested bits h: quality is ~flat for high h then falls off a cliff - the
+critical nested combination is the last h before the cliff.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import materialize, nest_quantize, nest_quantize_tree
+from repro.core.nesting import critical_nested_bits
+from repro.models import make_model
+
+from .common import emit, trained_weight
+
+
+def run():
+    w = trained_weight((2048, 1024))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(np.abs(rng.normal(size=(256, 2048))).astype(np.float32))
+    y_fp = x @ w
+    errs = {}
+    for h in (7, 6, 5, 4, 3, 2):
+        nt = nest_quantize(w, n=8, h=h, rounding="adaptive")
+        y = x @ nt.part_bit(jnp.float32)
+        errs[h] = float(jnp.linalg.norm(y - y_fp) / jnp.linalg.norm(y_fp))
+        emit(f"fig6_cliff_relerr_h{h}", 0.0, f"relerr={errs[h]:.4f}")
+    # cliff: error grows monotonically as h shrinks and is catastrophic
+    # by h=2 (>3x the h=5 error; the paper's Fig. 6 qualitative claim)
+    assert errs[2] > 3 * errs[5], errs
+    assert errs[7] < errs[6] < errs[5] < errs[4] < errs[3] < errs[2]
+
+    cfg = get_config("qwen2-1.5b").reduced()
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    size_mb = sum(x.size * 4 / 1e6 for x in jax.tree.leaves(params))
+    h_star = critical_nested_bits(size_mb, 8)
+    emit("eq12_critical_bits", 0.0, f"size_mb={size_mb:.1f};h_critical={h_star}")
+
+
+if __name__ == "__main__":
+    run()

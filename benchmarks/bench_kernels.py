@@ -1,0 +1,64 @@
+"""Kernel micro-benchmarks + derived roofline intent.
+
+CPU wall-times are NOT TPU times; the derived column carries the structural
+quantities that transfer: HBM bytes per weight read (packed vs bf16) and
+the VMEM working set per BlockSpec tile.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import int_range, packing
+from repro.core.decompose import decompose
+from repro.kernels.nest_recompose import ref as nr_ref
+from repro.kernels.packed_matmul import ref as pm_ref
+
+from .common import emit, time_fn
+
+
+def run():
+    rng = np.random.default_rng(0)
+    K, N, M, bk = 4096, 2048, 128, 512
+    x = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
+    w_dense = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32))
+    dense = jax.jit(lambda a, b: a @ b)
+    t_dense = time_fn(dense, x, w_dense)
+    emit("matmul_dense_f32_4096x2048", t_dense,
+         f"weight_bytes={K*N*4}")
+
+    for k in (4, 8):
+        lo, hi = int_range(k)
+        codes = jnp.asarray(rng.integers(lo, hi + 1, size=(K, N)), jnp.int32)
+        words = packing.pack_blocked(codes, k, bk, axis=0)
+        scale = jnp.asarray(rng.uniform(0.01, 0.1, size=(1, N)), np.float32)
+        f = jax.jit(lambda xx, ww, ss: pm_ref.packed_matmul_ref(
+            xx, ww, ss, k=k, K=K, block_k=bk))
+        t = time_fn(f, x, words, scale)
+        wb = int(np.prod(words.shape)) * 4
+        emit(f"packed_matmul_ref_k{k}", t,
+             f"weight_bytes={wb};vs_bf16={wb/(K*N*2):.3f};"
+             f"vmem_tile_bytes={(128*bk*4 + packing.packed_rows(bk,k)*128*4 + 128*128*4)}")
+
+    # recompose (page-in upgrade path)
+    n, h = 8, 4
+    w_int = jnp.asarray(rng.integers(-128, 128, size=(K, N)), jnp.int32)
+    wh, wl = decompose(w_int, n, h)
+    wph = packing.pack_blocked(wh, h, bk, axis=0)
+    wpl = packing.pack_blocked(wl, n - h + 1, bk, axis=0)
+    f = jax.jit(lambda a, b: nr_ref.recompose_ref(a, b, n=n, h=h, K=K,
+                                                  block_k=bk))
+    t = time_fn(f, wph, wpl)
+    read = int(np.prod(wph.shape) + np.prod(wpl.shape)) * 4
+    emit("nest_recompose_ref_8to4", t,
+         f"read_bytes={read};write_bytes={K*N};"
+         f"bytes_per_weight={(read + K*N)/(K*N):.3f}")
+
+    # pack/unpack throughput (switch-time cost)
+    t = time_fn(jax.jit(lambda c: packing.pack_blocked(c, 4, bk, axis=0)), codes)
+    emit("pack_blocked_k4_8M", t, f"elements={K*N}")
+
+
+if __name__ == "__main__":
+    run()

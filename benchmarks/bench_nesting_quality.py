@@ -1,0 +1,101 @@
+"""Paper Table 6 + Figs. 10-12: nesting quality across rounding methods and
+nested bits h (the accuracy experiment, with offline quality proxies).
+
+Quality proxies (DESIGN.md Sec. 7): per-layer output relative error under
+nonzero-mean activations, weight SQNR, and end-to-end top-1 agreement /
+logit KL of a small trained LM quantized with each method.  The paper's
+ORDERINGS are the reproduction target: BitShift << RTN << adaptive for the
+part-bit model; full-bit identical to direct INT8; quality monotone in h
+with a cliff at low h.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import nest_quantize, nest_quantize_tree, materialize, sqnr_db
+from repro.data import DataConfig, SyntheticLM
+from repro.models import make_model
+from repro.optim import adamw
+
+from .common import emit, time_fn, trained_weight
+
+
+def layer_output_error():
+    w = trained_weight((2048, 1024))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(np.abs(rng.normal(size=(512, 2048))).astype(np.float32))
+    y_fp = x @ w
+    for h in (7, 6, 5, 4, 3):
+        row = []
+        for m in ("bitshift", "rtn", "adaptive"):
+            nt = nest_quantize(w, n=8, h=h, rounding=m)
+            y = x @ nt.part_bit(jnp.float32)
+            rel = float(jnp.linalg.norm(y - y_fp) / jnp.linalg.norm(y_fp))
+            row.append((m, rel))
+        emit(f"table6_layer_relerr_h{h}", 0.0,
+             ";".join(f"{m}={r:.4f}" for m, r in row))
+        assert row[2][1] <= row[1][1] <= row[0][1] + 1e-6, row
+
+
+def small_model_agreement():
+    """Train a small LM, quantize with each method, compare top-1 agreement."""
+    cfg = get_config("qwen2-1.5b").reduced()
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw.init_state(params)
+    data = SyntheticLM(DataConfig(cfg.vocab_size, 32, 8), 0, 1)
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+        params, opt, _ = adamw.apply_update(params, grads, opt, lr=5e-3)
+        return params, opt, loss
+
+    for s in range(40):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(s).items()}
+        params, opt, loss = step(params, opt, batch)
+    eval_batch = {k: jnp.asarray(v) for k, v in data.batch(999).items()}
+    logits_fp = _all_logits(model, params, eval_batch)
+    top_fp = jnp.argmax(logits_fp, -1)
+
+    t_nest = time_fn(lambda: jax.block_until_ready(
+        jax.tree.leaves(nest_quantize_tree(params, n=8, h=4))[0]),
+        warmup=0, iters=1)
+
+    for h in (6, 5, 4, 3):
+        for m in ("bitshift", "rtn", "adaptive"):
+            nested = nest_quantize_tree(params, n=8, h=h, rounding=m)
+            part = materialize(nested, "part", jnp.float32)
+            full = materialize(nested, "full", jnp.float32)
+            lp = _all_logits(model, part, eval_batch)
+            lf = _all_logits(model, full, eval_batch)
+            agree_p = float(jnp.mean(top_fp == jnp.argmax(lp, -1)))
+            agree_f = float(jnp.mean(top_fp == jnp.argmax(lf, -1)))
+            loss_p = float(model.loss_fn(part, eval_batch))
+            if m == "adaptive":
+                emit(f"table6_top1_agree_h{h}", 0.0,
+                     f"part={agree_p:.3f};full={agree_f:.3f};"
+                     f"part_loss={loss_p:.3f}")
+            else:
+                emit(f"table6_top1_agree_h{h}_{m}", 0.0,
+                     f"part={agree_p:.3f};full={agree_f:.3f}")
+    emit("alg1_nest_quantize_tree", t_nest, "whole-model Algorithm 1")
+
+
+def _all_logits(model, params, batch):
+    from repro.models.model import _forward_seq, lm_logits
+    h, _, _ = _forward_seq(params, batch, model.cfg, want_cache=False)
+    from repro.models.layers import norm
+    return lm_logits(params, h, model.cfg)
+
+
+def run():
+    layer_output_error()
+    small_model_agreement()
+
+
+if __name__ == "__main__":
+    run()

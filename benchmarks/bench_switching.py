@@ -1,0 +1,47 @@
+"""Paper Table 11: switching overheads (page-in/out) and reductions.
+
+NestQuant upgrade = page-in bytes(w_low) with ZERO page-out; the
+diverse-bitwidths baseline pages in the full INT-n model and pages out the
+INT-h model.  Reduction = 1 - nest/(div_in + div_out), the paper's
+'Reduced Overhead' column (57-87% across configs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.core import NestQuantStore, nest_quantize_tree
+from repro.models import make_model
+
+from .common import emit
+
+
+def run():
+    rng = jax.random.PRNGKey(0)
+    for arch in ("qwen2-1.5b", "mistral-nemo-12b", "mamba2-780m"):
+        cfg = ARCHS[arch].reduced()
+        params = make_model(cfg).init(rng)
+        for (n, h) in ((8, 4), (8, 5), (8, 6), (8, 7), (6, 4), (6, 5)):
+            nested = nest_quantize_tree(params, n=n, h=h)
+            store = NestQuantStore(nested, n=n, h=h, mode="part")
+            store.to_full()           # upgrade
+            up_in = store.ledger.page_in_bytes
+            up_out = store.ledger.page_out_bytes
+            store.to_part()           # downgrade
+            dn_out = store.ledger.page_out_bytes - 0
+            div = store.diverse_baseline()
+            red = store.switch_reduction()
+            # theoretical reduction: 1 - (l+1)/(n + h)
+            theo = 1 - (n - h + 1) / (n + h)
+            emit(f"table11_{arch}_n{n}h{h}", 0.0,
+                 f"nest_pagein_MB={up_in/1e6:.3f};nest_pageout=0;"
+                 f"div_pagein_MB={div['switch_page_in']/1e6:.3f};"
+                 f"div_pageout_MB={div['switch_page_out']/1e6:.3f};"
+                 f"reduction={red:.3f};paper_theory={theo:.3f}")
+            assert up_out == 0
+            assert red > 0.4
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time per call in microseconds (blocks on jax arrays)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def trained_weight(shape=(1024, 1024), seed=0) -> jax.Array:
+    """Weight-like tensor: gaussian bulk + heavy-ish tails (outliers), the
+    distribution regime where adaptive rounding matters."""
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=shape) * 0.04
+    mask = rng.random(shape) < 0.003
+    w = np.where(mask, w * 8, w)
+    return jnp.asarray(w.astype(np.float32))

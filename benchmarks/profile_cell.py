@@ -1,0 +1,71 @@
+"""§Perf profiling tool: lower one cell and dump top contributors.
+
+  PYTHONPATH=src python -m benchmarks.profile_cell --arch X --shape Y \
+      [--kind bytes|collective|flops]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, SHAPES
+from repro.distributed import steps as steps_lib
+from repro.launch import hlo_analysis as ha
+from repro.launch.mesh import make_production_mesh
+from repro.optim import adamw
+
+
+def lower_cell(arch, shape_name, multi_pod=False, quant=None,
+               microbatch=None):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if microbatch:
+        import dataclasses
+        shape = dataclasses.replace(shape, microbatch=microbatch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if shape.kind == "train":
+        jitted, specs = steps_lib.build_train_step(cfg, shape, mesh)
+        model = specs["model"]
+        params_abs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        opt_abs = jax.eval_shape(adamw.init_state, params_abs)
+        batch_abs = steps_lib.input_specs(model.cfg, shape)
+        step_abs = jax.ShapeDtypeStruct((), jax.numpy.int32)
+        return jitted.lower(params_abs, opt_abs, batch_abs, step_abs)
+    if shape.kind == "prefill":
+        jitted, specs = steps_lib.build_prefill_step(cfg, shape, mesh)
+        model = specs["model"]
+        params_abs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        return jitted.lower(params_abs, steps_lib.input_specs(cfg, shape))
+    jitted, specs = steps_lib.build_decode_step(cfg, shape, mesh, quant=quant)
+    model = specs["model"]
+    params_abs = specs["abstract_params"]
+    io = steps_lib.input_specs(cfg, shape, model=model)
+    return jitted.lower(params_abs, io["inputs"], io["cache"])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--kind", default="bytes",
+                    choices=["bytes", "collective", "flops"])
+    ap.add_argument("--n", type=int, default=15)
+    ap.add_argument("--quant", default=None)
+    ap.add_argument("--microbatch", type=int, default=None)
+    args = ap.parse_args()
+    text = lower_cell(args.arch, args.shape, quant=args.quant,
+                      microbatch=args.microbatch).compile().as_text()
+    costs = ha.analyze(text)
+    print(f"# totals/device: flops={costs.flops:.3e} bytes={costs.bytes:.3e} "
+          f"coll={costs.collective_bytes:.3e} "
+          f"(convert={costs.convert_bytes:.3e} copy={costs.copy_bytes:.3e})")
+    print(ha.roofline_terms(costs))
+    for row in ha.top_contributors(text, args.kind, args.n):
+        v, op, path, shp, meta = row
+        print(f"{v/1e9:10.3f}GB {op:<20} {path:<12} {shp:<40} {meta[-60:]}")
+
+
+if __name__ == "__main__":
+    main()

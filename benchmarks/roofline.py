@@ -1,0 +1,84 @@
+"""Roofline aggregation: reads the dry-run JSON artifacts and prints the
+per-(arch x shape) three-term table (EXPERIMENTS.md §Roofline).
+
+  PYTHONPATH=src python -m benchmarks.roofline [--mesh pod16x16] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from .common import emit
+
+HW = "TPUv5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s/link ICI"
+
+
+def load(mesh: str = "pod16x16", path: str = "experiments/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(path, f"*__{mesh}.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def fmt_row(r):
+    if r.get("skipped"):
+        return None
+    t = r["roofline"]
+    total = max(t["compute_s"], t["memory_s"], t["collective_s"])
+    frac = t["compute_s"] / total if total else 0.0
+    return {
+        "arch": r["arch"], "shape": r["shape"],
+        "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+        "collective_s": t["collective_s"], "dominant": t["dominant"],
+        "model_flops": r["model_flops_global"],
+        "hlo_flops": r["hlo_flops_global"],
+        "useful_ratio": r["useful_flops_ratio"],
+        "roofline_fraction": frac,
+    }
+
+
+def run(mesh: str = "pod16x16"):
+    rows = load(mesh)
+    n_ok = 0
+    for r in rows:
+        row = fmt_row(r)
+        if row is None:
+            emit(f"roofline_{r['arch']}_{r['shape']}", 0.0, "skipped")
+            continue
+        n_ok += 1
+        emit(f"roofline_{row['arch']}_{row['shape']}", 0.0,
+             f"compute={row['compute_s']:.4f}s;memory={row['memory_s']:.4f}s;"
+             f"collective={row['collective_s']:.4f}s;dom={row['dominant']};"
+             f"useful={row['useful_ratio']:.3f};"
+             f"roofline_frac={row['roofline_fraction']:.3f}")
+    emit("roofline_cells_analyzed", 0.0, f"{n_ok};hw={HW}")
+
+
+def markdown(mesh: str = "pod16x16"):
+    rows = [fmt_row(r) for r in load(mesh)]
+    print("| arch | shape | compute (s) | memory (s) | collective (s) | "
+          "dominant | useful FLOPs ratio | roofline fraction |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in load(mesh):
+        row = fmt_row(r)
+        if row is None:
+            print(f"| {r['arch']} | {r['shape']} | - | - | - | skipped "
+                  f"(full attention @512k) | - | - |")
+            continue
+        print(f"| {row['arch']} | {row['shape']} | {row['compute_s']:.4f} | "
+              f"{row['memory_s']:.4f} | {row['collective_s']:.4f} | "
+              f"{row['dominant']} | {row['useful_ratio']:.3f} | "
+              f"{row['roofline_fraction']:.3f} |")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--md", action="store_true")
+    a = ap.parse_args()
+    if a.md:
+        markdown(a.mesh)
+    else:
+        run(a.mesh)

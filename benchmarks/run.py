@@ -1,0 +1,49 @@
+"""Benchmark aggregator: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see each module's docstring
+for the paper table it reproduces).
+
+  PYTHONPATH=src python -m benchmarks.run [--only substring]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (bench_cliff, bench_kernels, bench_nesting_quality,
+                   bench_numerical_errors, bench_similarity, bench_storage,
+                   bench_switching, roofline)
+    suites = [
+        ("table7_numerical_errors", bench_numerical_errors.run),
+        ("table4_5_similarity", bench_similarity.run),
+        ("table6_nesting_quality", bench_nesting_quality.run),
+        ("fig6_cliff", bench_cliff.run),
+        ("table8_9_10_storage", bench_storage.run),
+        ("table11_switching", bench_switching.run),
+        ("kernels", bench_kernels.run),
+        ("roofline", roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, e))
+            traceback.print_exc()
+            print(f"{name},0.00,FAILED:{type(e).__name__}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Mamba2-780m [arXiv:2405.21060] - pure SSD (state-space duality), attention-free."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m",
+    family="ssm",
+    num_layers=48,
+    d_model=1536,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_headdim=64,
+    ssm_expand=2,
+    norm="rmsnorm",
+)

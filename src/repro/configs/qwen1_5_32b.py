@@ -1,0 +1,19 @@
+"""Qwen1.5-32B [hf:Qwen/Qwen1.5 family] - dense decoder, MHA (kv=40), QKV bias."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=40,
+    head_dim=128,
+    d_ff=27392,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1e6,
+    act="swiglu",
+    norm="rmsnorm",
+    shard_2d=True,
+)

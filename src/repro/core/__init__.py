@@ -1,0 +1,11 @@
+"""NestQuant core: the paper's contribution as a composable JAX module."""
+from .quantizer import (compute_scale, quantize_rtn, dequantize, perturbation,
+                        int_range, sqnr_db)
+from .squant import adaptive_round, case_metric
+from .decompose import (split_high, split_low, recompose, decompose,
+                        recompose_error, numerical_error_table, ROUNDINGS)
+from .packing import pack, unpack, per_word, packed_rows, packed_nbytes
+from .nesting import (NestedTensor, nest_quantize, nest_quantize_tree,
+                      materialize, tree_bytes, critical_nested_bits,
+                      default_predicate)
+from .switching import NestQuantStore, SwitchLedger, diverse_bitwidth_bytes

@@ -1,0 +1,101 @@
+"""Integer weight decomposition + nesting recomposition (paper Sec. 3.2).
+
+    w_int = w_high * 2^l + w_low            (Eq. 6)
+    w_high ~ Clip(round(w_int / 2^l), ...)  (Eq. 7, method-dependent rounding)
+    w_low  = Clip(w_int - w_high * 2^l, ...) (Eq. 11)
+
+Three rounding methods for w_high (paper Table 6 / Table 7):
+  * 'bitshift' - arithmetic right shift (floor), the naive split
+  * 'rtn'      - round-to-nearest of w_int / 2^l
+  * 'adaptive' - SQuant-style CASE flip (mixed round up/down)
+
+With the paper's EXTRA 1-BIT COMPENSATION the lower part is stored with
+(l+1) bits and recomposition is exactly lossless: the error of any
+floor/ceil-constrained rounding lies in [-2^(l-1)+1, 2^(l-1)] (Table 7),
+and clip-range + error fits the signed (l+1)-bit range [-2^l, 2^l - 1].
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .quantizer import int_range
+from .squant import adaptive_round
+
+ROUNDINGS = ("bitshift", "rtn", "adaptive")
+
+
+def split_high(w_int: jax.Array, n: int, h: int, method: str = "adaptive",
+               group_size: Optional[int] = None) -> jax.Array:
+    """Derive the higher-bit weight w_high (INT-h codes) from w_int (INT-n)."""
+    assert 0 < h < n, (n, h)
+    l = n - h
+    lo, hi = int_range(h)
+    w_int = w_int.astype(jnp.int32)
+    if method == "bitshift":
+        # arithmetic shift == floor division for two's complement
+        w_high = jnp.floor_divide(w_int, 2 ** l)
+    elif method == "rtn":
+        w_high = jnp.round(w_int.astype(jnp.float32) / (2 ** l)).astype(jnp.int32)
+    elif method == "adaptive":
+        w_high = adaptive_round(w_int.astype(jnp.float32) / (2 ** l), h,
+                                group_size=group_size)
+    else:
+        raise ValueError(f"unknown rounding {method!r}")
+    return jnp.clip(w_high, lo, hi).astype(jnp.int32)
+
+
+def split_low(w_int: jax.Array, w_high: jax.Array, n: int, h: int,
+              compensate: bool = True) -> jax.Array:
+    """Lower-bit weight w_low (Eq. 11). With compensation it uses (l+1) bits
+    and is exact; without it is clipped to signed l bits (lossy, Table 7)."""
+    l = n - h
+    w_low = w_int.astype(jnp.int32) - w_high.astype(jnp.int32) * (2 ** l)
+    bits = l + 1 if compensate else l
+    lo, hi = int_range(bits)
+    return jnp.clip(w_low, lo, hi).astype(jnp.int32)
+
+
+def recompose(w_high: jax.Array, w_low: jax.Array, n: int, h: int) -> jax.Array:
+    """Eq. 6: page-in upgrade path. LeftShift(w_high, l) + w_low, clipped to INT-n."""
+    l = n - h
+    lo, hi = int_range(n)
+    w = w_high.astype(jnp.int32) * (2 ** l) + w_low.astype(jnp.int32)
+    return jnp.clip(w, lo, hi).astype(jnp.int32)
+
+
+def decompose(w_int: jax.Array, n: int, h: int, method: str = "adaptive",
+              compensate: bool = True, group_size: Optional[int] = None):
+    """Full decomposition -> (w_high, w_low)."""
+    w_high = split_high(w_int, n, h, method=method, group_size=group_size)
+    w_low = split_low(w_int, w_high, n, h, compensate=compensate)
+    return w_high, w_low
+
+
+def recompose_error(w_int: jax.Array, n: int, h: int, method: str,
+                    compensate: bool) -> jax.Array:
+    """Numerical error w_int - recompose(decompose(w_int)) (paper Fig. 9/Table 7)."""
+    w_high, w_low = decompose(w_int, n, h, method=method, compensate=compensate)
+    return w_int.astype(jnp.int32) - recompose(w_high, w_low, n, h)
+
+
+def numerical_error_table(n: int = 8, methods=("bitshift", "rtn", "adaptive")):
+    """Reproduce paper Table 7: error stats of all signed INT-n numbers.
+
+    Returns {method: {h: {'nonzero': int, 'range': (lo, hi)}}}.
+    """
+    lo, hi = int_range(n)
+    codes = jnp.arange(lo, hi + 1, dtype=jnp.int32)
+    out = {}
+    for method in methods:
+        per_h = {}
+        for h in range(n - 1, 2, -1):
+            err = recompose_error(codes, n, h, method, compensate=False)
+            per_h[h] = {
+                "nonzero": int(jnp.sum(err != 0)),
+                "range": (int(err.min()), int(err.max())),
+            }
+        out[method] = per_h
+    return out

@@ -1,0 +1,238 @@
+"""NestQuant procedures (paper Algorithm 1 + Eq. 12 selection rule).
+
+``nest_quantize`` runs the layer-wise procedure on one weight matrix:
+  step 1  INT-n Hessian-based (SQuant-style) quantization of w
+  step 2  INT-h Hessian-based quantization of w_int / 2^l  ->  w_high,
+          w_low = w_int - w_high * 2^l with extra 1-bit compensation
+  step 3  pack h-bit and (l+1)-bit weights (packed-bit tensors)
+
+``nest_quantize_tree`` applies it over a model parameter pytree, nesting
+every matmul weight (>= 2D, both trailing dims >= min_dim) and keeping
+norms / biases / tiny tensors in floating point - mirroring the paper,
+which nests layer weights and keeps scales in FP32.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import packing
+from .decompose import recompose, split_high, split_low
+from .quantizer import compute_scale, dequantize, int_range
+from .squant import adaptive_round
+
+
+# ---------------------------------------------------------------------------
+# Nested tensor container (a pytree so it can live inside model params)
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class NestedTensor:
+    """Packed NestQuant representation of one weight tensor.
+
+    The logical weight has shape ``shape`` = (..., K, N); quantization is
+    per-output-channel (axis N), the SQuant flip group is the reduction
+    axis K.  ``w_high`` holds packed h-bit codes, ``w_low`` packed
+    (l+1)-bit codes (paper's compensation), both packed along K slot-major
+    (see core/packing.py).
+    """
+    w_high: jax.Array          # packed int32, (..., ceil(K/pw_h), N)
+    w_low: jax.Array           # packed int32, (..., ceil(K/pw_l), N)
+    scale: jax.Array           # f32, (..., 1, N)
+    shape: Tuple[int, ...]     # logical shape
+    n: int
+    h: int
+
+    # -- pytree plumbing ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.w_high, self.w_low, self.scale), (self.shape, self.n, self.h)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        w_high, w_low, scale = children
+        shape, n, h = aux
+        return cls(w_high, w_low, scale, shape, n, h)
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def l(self) -> int:
+        return self.n - self.h
+
+    @property
+    def K(self) -> int:
+        return self.shape[-2]
+
+    def nbytes_high(self) -> int:
+        return int(np.prod(self.w_high.shape)) * 4
+
+    def nbytes_low(self) -> int:
+        return int(np.prod(self.w_low.shape)) * 4
+
+    def nbytes_scales(self) -> int:
+        return int(np.prod(self.scale.shape)) * 4
+
+    # -- materialization ----------------------------------------------------
+    def codes_high(self) -> jax.Array:
+        return packing.unpack(self.w_high, self.h, self.K, axis=self.w_high.ndim - 2)
+
+    def codes_low(self) -> jax.Array:
+        return packing.unpack(self.w_low, self.l + 1, self.K, axis=self.w_low.ndim - 2)
+
+    def codes_full(self) -> jax.Array:
+        return recompose(self.codes_high(), self.codes_low(), self.n, self.h)
+
+    def part_bit(self, dtype=jnp.bfloat16) -> jax.Array:
+        """Dequantized part-bit weight: s * 2^l * w_high (Eq. 10).
+
+        (No reshape: unpack restores the logical trailing dims, and leading
+        stacked dims may have been sliced away by a layer scan.)"""
+        s_high = self.scale * (2.0 ** self.l)
+        return dequantize(self.codes_high(), s_high, dtype)
+
+    def full_bit(self, dtype=jnp.bfloat16) -> jax.Array:
+        """Dequantized full-bit weight after page-in + recompose."""
+        return dequantize(self.codes_full(), self.scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 12: critical nested combination rule of thumb
+# ---------------------------------------------------------------------------
+def critical_nested_bits(model_size_mb: float, n: int = 8) -> int:
+    if model_size_mb < 3e1:
+        return n // 2 + 1
+    if model_size_mb < 3e2:
+        return n // 2
+    return n // 2 - 1
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 on a single (K, N) (or batched (..., K, N)) weight
+# ---------------------------------------------------------------------------
+def nest_quantize(w: jax.Array, n: int = 8, h: Optional[int] = None,
+                  rounding: str = "adaptive",
+                  group_size: Optional[int] = None) -> NestedTensor:
+    assert w.ndim >= 2, "nest_quantize expects a matmul weight (..., K, N)"
+    if h is None:
+        h = critical_nested_bits(w.size * 4 / 1e6, n)
+    l = n - h
+    w = w.astype(jnp.float32)
+
+    # step 1: INT-n quantization, per-output-channel scale (reduced over the
+    # K axis only: stacked layer/expert dims keep their own scales), CASE
+    # flips over K.
+    qmax = 2 ** (n - 1) - 1
+    amax = jnp.max(jnp.abs(w), axis=-2, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    v = w / scale
+    if rounding == "adaptive":
+        vt = jnp.swapaxes(v, -1, -2)          # flip group = reduction axis K
+        w_int = jnp.swapaxes(adaptive_round(vt, n, group_size=group_size), -1, -2)
+    else:
+        lo, hi = int_range(n)
+        w_int = jnp.clip(jnp.round(v), lo, hi).astype(jnp.int32)
+
+    # step 2: INT-h quantization of w_int / 2^l (decomposition with the
+    # chosen rounding) + compensated lower part.
+    if rounding == "adaptive":
+        vt = jnp.swapaxes(w_int.astype(jnp.float32) / (2 ** l), -1, -2)
+        lo_h, hi_h = int_range(h)
+        w_high = jnp.swapaxes(
+            jnp.clip(adaptive_round(vt, h, group_size=group_size), lo_h, hi_h), -1, -2
+        ).astype(jnp.int32)
+    else:
+        w_high = split_high(w_int, n, h, method=rounding)
+    w_low = split_low(w_int, w_high, n, h, compensate=True)
+
+    # step 3: pack h-bit and (l+1)-bit weights.
+    ax = w.ndim - 2
+    return NestedTensor(
+        w_high=packing.pack(w_high, h, axis=ax),
+        w_low=packing.pack(w_low, l + 1, axis=ax),
+        scale=scale,
+        shape=tuple(w.shape),
+        n=n,
+        h=h,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Whole-model nesting
+# ---------------------------------------------------------------------------
+def default_predicate(path: str, leaf: Any, min_dim: int = 64) -> bool:
+    """Nest matmul weights; keep norms/bias/SSM-scalars/conv in FP."""
+    if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+        return False
+    if leaf.shape[-1] < min_dim or leaf.shape[-2] < min_dim:
+        return False
+    if not jnp.issubdtype(leaf.dtype, jnp.floating):
+        return False
+    lowered = path.lower()
+    for kw in ("norm", "bias", "conv", "a_log", "router"):
+        if kw in lowered:
+            return False
+    return True
+
+
+def _paths(tree) -> Dict[str, Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(p): v for p, v in flat}, treedef
+
+
+def nest_quantize_tree(params, n: int = 8, h: Optional[int] = None,
+                       rounding: str = "adaptive",
+                       predicate: Callable[[str, Any], bool] = default_predicate,
+                       group_size: Optional[int] = None):
+    """Apply Algorithm 1 across a parameter pytree.
+
+    Returns a pytree of the same structure where nested leaves are
+    ``NestedTensor`` and the rest are unchanged.  ``h=None`` selects the
+    critical nested combination per-model via Eq. 12 (model size in MB).
+    """
+    if h is None:
+        size_mb = sum(
+            x.size * 4 / 1e6 for x in jax.tree_util.tree_leaves(params)
+            if hasattr(x, "size")
+        )
+        h = critical_nested_bits(size_mb, n)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        if predicate(key, leaf):
+            out.append(nest_quantize(leaf, n=n, h=h, rounding=rounding,
+                                     group_size=group_size))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def materialize(nested_params, mode: str = "full", dtype=jnp.bfloat16):
+    """Dequantize a nested pytree to dense weights (mode: 'full' | 'part')."""
+    def leaf_fn(x):
+        if isinstance(x, NestedTensor):
+            return x.full_bit(dtype) if mode == "full" else x.part_bit(dtype)
+        return x
+    return jax.tree_util.tree_map(
+        leaf_fn, nested_params, is_leaf=lambda x: isinstance(x, NestedTensor))
+
+
+def tree_bytes(nested_params) -> Dict[str, int]:
+    """Byte accounting over a nested pytree (packed sizes + FP leftovers)."""
+    acc = {"high": 0, "low": 0, "scales": 0, "fp": 0}
+    for leaf in jax.tree_util.tree_leaves(
+            nested_params, is_leaf=lambda x: isinstance(x, NestedTensor)):
+        if isinstance(leaf, NestedTensor):
+            acc["high"] += leaf.nbytes_high()
+            acc["low"] += leaf.nbytes_low()
+            acc["scales"] += leaf.nbytes_scales()
+        elif hasattr(leaf, "nbytes"):
+            acc["fp"] += int(leaf.nbytes)
+    acc["total"] = sum(acc.values())
+    return acc

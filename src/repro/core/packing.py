@@ -1,0 +1,106 @@
+"""Packed-bit tensors (paper Sec. 3.3.3), TPU-adapted.
+
+The paper packs 64//k sequential k-bit values per int64 word (PyTorch /
+IoT CPU layout).  TPU adaptation (see DESIGN.md Sec. 3): we pack into
+**int32 words, slot-major along the packing axis**: with R words covering
+K = R * per_word elements, word r holds elements {r, r + R, r + 2R, ...}.
+Unpacking slot j then yields the contiguous element block [j*R, (j+1)*R),
+so the unpack is shift+mask (VPU) followed by a concat - no element
+interleave, no lane-crossing shuffles.
+
+Capacity is identical to the paper's layout (per_word = word_bits // k);
+only the address map differs, which is irrelevant to the storage /
+switching accounting and friendly to vectorized unpack in the Pallas
+matmul kernel (kernels/packed_matmul).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+WORD_BITS = 32
+
+
+def per_word(k: int) -> int:
+    assert 2 <= k <= 8, k
+    return WORD_BITS // k
+
+
+def packed_rows(K: int, k: int) -> int:
+    return math.ceil(K / per_word(k))
+
+
+def packed_nbytes(shape: Tuple[int, ...], k: int, axis: int = 0) -> int:
+    """Bytes of the packed representation of an int tensor of ``shape``."""
+    rest = math.prod(shape) // shape[axis]
+    return packed_rows(shape[axis], k) * rest * 4
+
+
+def pack_blocked(x: jax.Array, k: int, block: int, axis: int = 0) -> jax.Array:
+    """Pack slot-major WITHIN blocks of ``block`` elements along ``axis``.
+
+    Same capacity as :func:`pack`; the per-block address map is what the
+    Pallas packed_matmul kernel consumes (a K-tile of the matmul maps to a
+    contiguous row range of words).  block must be a multiple of per_word
+    and divide the padded K.
+    """
+    x = jnp.moveaxis(x, axis, 0)
+    K = x.shape[0]
+    pad = (-K) % block
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+    nb = x.shape[0] // block
+    xb = x.reshape((nb, block) + x.shape[1:])
+    words = pack(xb, k, axis=1)                  # (nb, packed_rows(block), ...)
+    words = words.reshape((nb * packed_rows(block, k),) + x.shape[1:])
+    return jnp.moveaxis(words, 0, axis)
+
+
+def unpack_blocked(words: jax.Array, k: int, K: int, block: int,
+                   axis: int = 0, dtype=jnp.int32) -> jax.Array:
+    w = jnp.moveaxis(words, axis, 0)
+    rows_per_block = packed_rows(block, k)
+    nb = w.shape[0] // rows_per_block
+    wb = w.reshape((nb, rows_per_block) + w.shape[1:])
+    x = unpack(wb, k, block, axis=1, dtype=dtype)
+    x = x.reshape((nb * block,) + w.shape[1:])[:K]
+    return jnp.moveaxis(x, 0, axis)
+
+
+def pack(x: jax.Array, k: int, axis: int = 0) -> jax.Array:
+    """Pack signed k-bit codes into int32 words along ``axis`` (slot-major)."""
+    pw = per_word(k)
+    x = jnp.moveaxis(x, axis, 0)
+    K = x.shape[0]
+    R = packed_rows(K, k)
+    pad = R * pw - K
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+    mask = jnp.uint32(2 ** k - 1)
+    # element index = j * R + r  ->  slot j of word r
+    slots = x.astype(jnp.int32).astype(jnp.uint32).reshape((pw, R) + x.shape[1:])
+    word = jnp.zeros((R,) + x.shape[1:], jnp.uint32)
+    for j in range(pw):
+        word = word | ((slots[j] & mask) << jnp.uint32(j * k))
+    word = jnp.moveaxis(word, 0, axis)
+    return jax.lax.bitcast_convert_type(word, jnp.int32)
+
+
+def unpack(words: jax.Array, k: int, K: int, axis: int = 0,
+           dtype=jnp.int32) -> jax.Array:
+    """Inverse of :func:`pack`; returns sign-extended codes."""
+    pw = per_word(k)
+    w = jax.lax.bitcast_convert_type(words, jnp.uint32)
+    w = jnp.moveaxis(w, axis, 0)
+    mask = jnp.uint32(2 ** k - 1)
+    sign = 2 ** (k - 1)
+    parts = []
+    for j in range(pw):
+        v = ((w >> jnp.uint32(j * k)) & mask).astype(jnp.int32)
+        parts.append(jnp.where(v >= sign, v - 2 ** k, v))
+    x = jnp.concatenate(parts, axis=0)[:K]
+    return jnp.moveaxis(x, 0, axis).astype(dtype)

@@ -1,0 +1,58 @@
+"""Symmetric linear quantization (paper Sec. 3.1, Eqs. 2-4).
+
+Signed INT-n, symmetric, zero-point-free:
+    w_int = Clip(round(w / s), -2^(n-1), 2^(n-1) - 1)
+    w_hat = s * w_int
+
+Scales are per-tensor or per-output-channel (axis-wise max-abs), matching
+the paper's min-max linear quantizer for symmetric signed integers.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def int_range(n_bits: int):
+    """[min, max] of signed INT-n (paper's clip thresholds)."""
+    return -(2 ** (n_bits - 1)), 2 ** (n_bits - 1) - 1
+
+
+def compute_scale(w: jax.Array, n_bits: int, channel_axis: Optional[int] = None,
+                  eps: float = 1e-12) -> jax.Array:
+    """Max-abs symmetric scale; per-tensor or per-channel along channel_axis."""
+    qmax = 2 ** (n_bits - 1) - 1
+    w = w.astype(jnp.float32)
+    if channel_axis is None:
+        amax = jnp.max(jnp.abs(w))
+    else:
+        reduce_axes = tuple(i for i in range(w.ndim) if i != channel_axis)
+        amax = jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True)
+    return jnp.maximum(amax, eps) / qmax
+
+
+def quantize_rtn(w: jax.Array, scale: jax.Array, n_bits: int) -> jax.Array:
+    """Round-to-nearest quantization (Eq. 2). Returns int32 codes."""
+    lo, hi = int_range(n_bits)
+    q = jnp.round(w.astype(jnp.float32) / scale)
+    return jnp.clip(q, lo, hi).astype(jnp.int32)
+
+
+def dequantize(w_int: jax.Array, scale: jax.Array,
+               dtype=jnp.float32) -> jax.Array:
+    """Eq. 3: w_hat = s * w_int."""
+    return (w_int.astype(jnp.float32) * scale).astype(dtype)
+
+
+def perturbation(w: jax.Array, w_int: jax.Array, scale: jax.Array) -> jax.Array:
+    """Eq. 4: delta_w = w/s - w_int."""
+    return w.astype(jnp.float32) / scale - w_int.astype(jnp.float32)
+
+
+def sqnr_db(w: jax.Array, w_hat: jax.Array) -> jax.Array:
+    """Signal-to-quantization-noise ratio in dB (quality proxy metric)."""
+    w = w.astype(jnp.float32)
+    err = w - w_hat.astype(jnp.float32)
+    return 10.0 * jnp.log10(jnp.sum(w * w) / jnp.maximum(jnp.sum(err * err), 1e-30))

@@ -1,0 +1,95 @@
+"""Data-free Hessian-based adaptive rounding (SQuant-style flip algorithm).
+
+The paper (Sec. 3.3) designates SQuant [Guo et al., ICLR'22] as the
+adaptive-rounding optimizer for both quantization steps of Algorithm 1.
+SQuant approximates the layer Hessian of Eq. 5 with a diagonal +
+row-structured form and minimizes the Constrained Absolute Sum of Error
+(CASE): after rounding, the *signed sum* of elementwise rounding errors
+within each flip group (kernel / output channel) must be <= 0.5, achieved
+by flipping the rounding direction of the elements whose fractional parts
+are closest to the boundary.
+
+Key structural constraint for nesting (paper Sec. 3.3.2 / Table 7): every
+element's code stays in {floor(v), ceil(v)} - adaptive rounding is "a type
+of mixed Rounding Up and Down".  Each element therefore flips AT MOST ONCE
+from its RTN value, toward the other member of the floor/ceil pair.  This
+is exactly what bounds the nesting numerical error to [-2^(l-1)+1, 2^(l-1)]
+and makes the (l+1)-bit compensation lossless.
+
+Implementation notes (TPU/host, pure JAX, fully vectorized over rows):
+  * flips are selected by rank: for a row with signed error sum E > 0 we
+    flip the k = round(E) elements with the largest positive fractional
+    error up (each flip reduces E by exactly 1); symmetrically for E < 0.
+  * elements whose ceil would exceed the clip range never flip up, and
+    vice versa, so codes always stay in range.
+  * ``group_size`` splits rows into sub-groups (SQuant-K analog for the
+    fine-grained kernel level); group_size=None treats the whole trailing
+    dimension as one group (SQuant-C, output-channel level).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .quantizer import int_range
+
+
+def _flip_rows(v: jax.Array, lo: int, hi: int) -> jax.Array:
+    """CASE flip over the last axis of v. Returns int32 codes.
+
+    v: real-valued targets (w/s).  Works on any leading batch shape.
+    """
+    v = v.astype(jnp.float32)
+    q0 = jnp.clip(jnp.round(v), lo, hi)
+    e = v - q0                                 # in [-0.5, 0.5] away from clip edge
+    E = jnp.sum(e, axis=-1, keepdims=True)
+    k = jnp.round(E)                           # signed flip count per row
+
+    # candidate masks: can only flip toward the other of {floor, ceil},
+    # and must stay inside the integer range after the flip.
+    can_up = (e > 0) & (q0 + 1 <= hi)
+    can_dn = (e < 0) & (q0 - 1 >= lo)
+
+    # Rank elements for upward flips: largest positive e first.
+    up_key = jnp.where(can_up, e, -jnp.inf)
+    up_rank = jnp.argsort(jnp.argsort(-up_key, axis=-1), axis=-1)
+    flip_up = (k > 0) & can_up & (up_rank < k)
+
+    # Rank for downward flips: most negative e first.
+    dn_key = jnp.where(can_dn, e, jnp.inf)
+    dn_rank = jnp.argsort(jnp.argsort(dn_key, axis=-1), axis=-1)
+    flip_dn = (k < 0) & can_dn & (dn_rank < -k)
+
+    q = q0 + flip_up.astype(jnp.float32) - flip_dn.astype(jnp.float32)
+    return jnp.clip(q, lo, hi).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("n_bits", "group_size"))
+def adaptive_round(v: jax.Array, n_bits: int,
+                   group_size: Optional[int] = None) -> jax.Array:
+    """SQuant-style adaptive rounding of real targets ``v`` to INT-n codes.
+
+    v is w/s (step 1 of Algorithm 1) or w_int/2^l (step 2).  The flip group
+    is the trailing axis (output-channel rows), optionally subdivided into
+    ``group_size`` chunks (kernel-level CASE).
+    """
+    lo, hi = int_range(n_bits)
+    orig_shape = v.shape
+    if v.ndim == 1:
+        v = v[None, :]
+    v2 = v.reshape(-1, v.shape[-1])
+    if group_size and v2.shape[-1] % group_size == 0 and v2.shape[-1] > group_size:
+        g = v2.reshape(v2.shape[0], -1, group_size)
+        q = _flip_rows(g, lo, hi).reshape(v2.shape)
+    else:
+        q = _flip_rows(v2, lo, hi)
+    return q.reshape(orig_shape)
+
+
+def case_metric(v: jax.Array, q: jax.Array) -> jax.Array:
+    """Constrained Absolute Sum of Error per row: |sum(v - q)| (diagnostic)."""
+    e = v.astype(jnp.float32) - q.astype(jnp.float32)
+    return jnp.abs(jnp.sum(e, axis=-1))

@@ -1,0 +1,104 @@
+"""On-device model switching runtime (paper Sec. 3.3, Table 11).
+
+A :class:`NestQuantStore` owns the packed decomposed weights of one model.
+On TPU the paper's memory page-in/page-out maps to HBM residency (see
+DESIGN.md Sec. 3): ``w_high`` is always resident; ``w_low`` is paged in
+from host/storage on upgrade and dropped on downgrade.
+
+The ledger reproduces the paper's Table 11 accounting:
+  * NestQuant upgrade:    page-in  = bytes(w_low),  page-out = 0
+  * NestQuant downgrade:  page-in  = 0,             page-out = bytes(w_low)
+  * diverse-bitwidths upgrade:   page-in = bytes(INT-n model),
+                                 page-out = bytes(INT-h model)
+  * diverse-bitwidths downgrade: the reverse.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import packing
+from .nesting import NestedTensor, materialize, tree_bytes
+
+
+@dataclass
+class SwitchLedger:
+    page_in_bytes: int = 0
+    page_out_bytes: int = 0
+    switches: int = 0
+
+    def record(self, page_in: int, page_out: int):
+        self.page_in_bytes += page_in
+        self.page_out_bytes += page_out
+        self.switches += 1
+
+
+def diverse_bitwidth_bytes(nested_params, n: int, h: int) -> Dict[str, int]:
+    """Storage of the baseline: two separate packed PTQ models (INT-n + INT-h)."""
+    total_n = total_h = 0
+    for leaf in jax.tree_util.tree_leaves(
+            nested_params, is_leaf=lambda x: isinstance(x, NestedTensor)):
+        if isinstance(leaf, NestedTensor):
+            K = leaf.shape[-2]
+            rest = 1
+            for d in leaf.shape[:-2] + leaf.shape[-1:]:
+                rest *= d
+            total_n += packing.packed_rows(K, n) * rest * 4
+            total_h += packing.packed_rows(K, h) * rest * 4
+    return {"int_n": total_n, "int_h": total_h, "total": total_n + total_h}
+
+
+@dataclass
+class NestQuantStore:
+    """Holds a nested model + switching state machine."""
+    nested_params: object
+    n: int
+    h: int
+    mode: str = "part"                     # 'part' | 'full'
+    dtype: object = jnp.bfloat16
+    ledger: SwitchLedger = field(default_factory=SwitchLedger)
+    _low_resident: bool = False
+
+    # -- byte accounting ------------------------------------------------
+    def bytes(self) -> Dict[str, int]:
+        return tree_bytes(self.nested_params)
+
+    def resident_bytes(self) -> int:
+        b = self.bytes()
+        base = b["high"] + b["scales"] + b["fp"]
+        return base + (b["low"] if self._low_resident else 0)
+
+    # -- switching -------------------------------------------------------
+    def to_full(self):
+        """Upgrade: page in w_low (zero page-out; paper Table 11)."""
+        if self.mode != "full":
+            self.ledger.record(page_in=self.bytes()["low"], page_out=0)
+            self.mode, self._low_resident = "full", True
+        return self
+
+    def to_part(self):
+        """Downgrade: page out w_low (zero page-in)."""
+        if self.mode != "part":
+            self.ledger.record(page_in=0, page_out=self.bytes()["low"])
+            self.mode, self._low_resident = "part", False
+        return self
+
+    # -- weights for inference -------------------------------------------
+    def params(self):
+        return materialize(self.nested_params, mode=self.mode, dtype=self.dtype)
+
+    # -- comparison baseline ----------------------------------------------
+    def diverse_baseline(self) -> Dict[str, int]:
+        d = diverse_bitwidth_bytes(self.nested_params, self.n, self.h)
+        d["switch_page_in"] = d["int_n"]   # upgrade: load full INT-n model
+        d["switch_page_out"] = d["int_h"]  # upgrade: evict INT-h model
+        return d
+
+    def switch_reduction(self) -> float:
+        """Paper's 'Reduced Overhead' column: 1 - nest/(diverse) for one upgrade."""
+        nest = self.bytes()["low"]
+        div = self.diverse_baseline()
+        return 1.0 - nest / max(div["switch_page_in"] + div["switch_page_out"], 1)

@@ -1,0 +1,1 @@
+from .ctx import logical_rules, shard_hint, to_pspec

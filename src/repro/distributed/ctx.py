@@ -1,0 +1,49 @@
+"""Logical-axis sharding context.
+
+Model code annotates activations with *logical* axis names via
+:func:`shard_hint`; the launcher installs a mapping from logical names to
+mesh axes (or None).  Outside any context the hints are no-ops, so the
+same model code runs single-device (tests) and multi-pod (dry-run/train).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current() -> Optional[Tuple[Mesh, Dict[str, object]]]:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def logical_rules(mesh: Mesh, rules: Dict[str, object]):
+    """rules: logical axis name -> mesh axis name | tuple | None."""
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def to_pspec(logical: Sequence[Optional[str]], rules: Dict[str, object]) -> P:
+    axes = []
+    for name in logical:
+        axes.append(rules.get(name) if name is not None else None)
+    return P(*axes)
+
+
+def shard_hint(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """Constrain intermediate sharding by logical axes (no-op w/o context)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = to_pspec(logical, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,57 @@
+"""Quantized gradient all-reduce with error feedback (beyond-paper feature).
+
+Distributed-optimization trick in the same spirit as the paper: gradients
+are symmetrically quantized to INT8 before the data-parallel all-reduce,
+cutting cross-pod collective bytes 4x (f32) / 2x (bf16), with an error-
+feedback residual [Seide et al. 2014; Karimireddy et al. 2019] carried
+across steps so the compression bias vanishes.
+
+``compress_decompress`` is designed to be called *inside* a shard_map
+(per-shard values, explicit ``psum``), so the collective is visible in the
+lowered HLO to the roofline collective-bytes parser.  The int32 psum of
+8-bit codes models the int8-width transport of a real ICI implementation
+(reported collective bytes are scaled accordingly by the analyzer).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.quantizer import compute_scale, dequantize, quantize_rtn
+
+
+def compress_decompress(g: jax.Array, residual: jax.Array,
+                        axis_name) -> Tuple[jax.Array, jax.Array]:
+    """Error-feedback int8 all-reduce of one gradient tensor.
+
+    Call inside shard_map/pmap. Returns (averaged gradient, new residual).
+    """
+    g32 = g.astype(jnp.float32) + residual
+    scale = compute_scale(g32, 8)
+    codes = quantize_rtn(g32, scale, 8)
+    new_residual = g32 - dequantize(codes, scale)
+    summed = jax.lax.psum(codes, axis_name)          # int8-width transport
+    scale_sum = jax.lax.psum(scale, axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    g_avg = summed.astype(jnp.float32) * (scale_sum / n) / n
+    return g_avg, new_residual
+
+
+def compressed_mean_tree(grads, residuals, axis_name):
+    """Tree-wise error-feedback compressed mean across ``axis_name``."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    out_g, out_r = [], []
+    for g, r in zip(flat_g, flat_r):
+        ga, rn = compress_decompress(g, r, axis_name)
+        out_g.append(ga)
+        out_r.append(rn)
+    return treedef.unflatten(out_g), treedef.unflatten(out_r)
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,1 @@
+from . import packed_matmul, nest_recompose, flash_attention

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: blockwise causal GQA flash attention (forward).
+
+Grid (B, Hq, nq, nkv); the trailing kv dimension is sequential on TPU, so
+running (m, l, acc) live in VMEM scratch across kv steps.  GQA is handled
+in the index map: query head h reads kv head h // group.  Causal blocks
+entirely above the diagonal are masked (the index map still delivers them;
+masking keeps the kernel simple - the production hint is to shrink the kv
+grid per q block, noted in EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale, bq, bkv, nkv):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, :]                        # (bq, hd)
+    k = k_ref[0, :, 0, :]                        # (bkv, hd)
+    v = v_ref[0, :, 0, :]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    kpos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nkv - 1)
+    def _done():
+        o_ref[0, :, 0, :] = (acc_ref[...] /
+                             jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_kv",
+                                             "interpret"))
+def flash_attention(q, k, v, *, block_q: int = 256, block_kv: int = 256,
+                    interpret: bool = False):
+    """q: (B,S,Hq,hd), k/v: (B,S,Hkv,hd), causal. Forward only."""
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    nq, nkv = S // block_q, S // block_kv
+    scale = 1.0 / (hd ** 0.5)
+    grid = (B, Hq, nq, nkv)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, bq=block_q, bkv=block_kv,
+                          nkv=nkv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, block_kv, 1, hd),
+                         lambda b, h, qi, ki: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, block_kv, 1, hd),
+                         lambda b, h, qi, ki: (b, ki, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd),
+                               lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

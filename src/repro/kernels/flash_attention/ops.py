@@ -1,0 +1,17 @@
+"""Jitted wrapper with platform dispatch for flash attention."""
+from __future__ import annotations
+
+import jax
+
+from . import kernel, ref
+
+
+def flash_attention(q, k, v, *, block_q: int = 256, block_kv: int = 256,
+                    use_pallas: bool = None, interpret: bool = False):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if (use_pallas or interpret) and q.shape[1] % block_q == 0 \
+            and q.shape[1] % block_kv == 0:
+        return kernel.flash_attention(q, k, v, block_q=block_q,
+                                      block_kv=block_kv, interpret=interpret)
+    return ref.attention_ref(q, k, v)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle: causal GQA attention (same math as models.attention)."""
+from __future__ import annotations
+
+from ...models.attention import full_attention
+
+
+def attention_ref(q, k, v):
+    """q: (B,S,Hq,hd), k/v: (B,S,Hkv,hd) -> (B,S,Hq,hd), causal."""
+    return full_attention(q, k, v, causal=True)

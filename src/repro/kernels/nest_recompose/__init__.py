@@ -1,0 +1,1 @@
+from .ops import nest_recompose

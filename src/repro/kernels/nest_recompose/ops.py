@@ -1,0 +1,18 @@
+"""Jitted wrapper with platform dispatch for nest_recompose."""
+from __future__ import annotations
+
+import jax
+
+from . import kernel, ref
+
+
+def nest_recompose(words_high, words_low, *, n: int, h: int, K: int,
+                   block_k: int = 512, use_pallas: bool = None,
+                   interpret: bool = False):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas or interpret:
+        return kernel.nest_recompose(words_high, words_low, n=n, h=h, K=K,
+                                     block_k=block_k, interpret=interpret)
+    return ref.recompose_ref(words_high, words_low, n=n, h=h, K=K,
+                             block_k=block_k)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused nest-recompose kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core import packing
+from ...core.decompose import recompose
+
+
+def recompose_ref(words_high, words_low, *, n: int, h: int, K: int,
+                  block_k: int):
+    """Block-packed w_high (h-bit) + w_low ((l+1)-bit) -> int8 INT-n codes."""
+    wh = packing.unpack_blocked(words_high, h, K, block_k, axis=0)
+    wl = packing.unpack_blocked(words_low, n - h + 1, K, block_k, axis=0)
+    return recompose(wh, wl, n, h).astype(jnp.int8)

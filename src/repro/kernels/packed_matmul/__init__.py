@@ -1,0 +1,1 @@
+from .ops import packed_matmul, prepare

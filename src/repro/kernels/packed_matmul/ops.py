@@ -1,0 +1,54 @@
+"""Jitted public wrapper: platform dispatch + weight preparation."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...core import packing
+from ...core.nesting import NestedTensor
+from . import kernel, ref
+
+DEFAULT_BLOCK_K = 512
+
+
+def prepare(nt: NestedTensor, mode: str = "full",
+            block_k: int = DEFAULT_BLOCK_K) -> Tuple[jax.Array, jax.Array, int, int]:
+    """NestedTensor -> (block-packed words, scale, k, K) for the kernel.
+
+    mode 'full': recomposed INT-n codes; 'part': INT-h codes with the
+    inflated nesting scale s*2^l (paper Eq. 10).
+    """
+    assert len(nt.shape) == 2, "kernel path expects a 2-D weight"
+    K = nt.shape[-2]
+    if mode == "full":
+        codes, k, scale = nt.codes_full(), nt.n, nt.scale
+    else:
+        codes, k, scale = nt.codes_high(), nt.h, nt.scale * (2.0 ** nt.l)
+    pad = (-K) % block_k
+    if pad:
+        codes = jnp.concatenate(
+            [codes, jnp.zeros((pad,) + codes.shape[1:], codes.dtype)], axis=0)
+    words = packing.pack_blocked(codes, k, block_k, axis=0)
+    return words, scale.reshape(1, -1), k, codes.shape[0]
+
+
+def packed_matmul(x, words, scale, *, k: int, K: int,
+                  block_k: int = DEFAULT_BLOCK_K, use_pallas: bool = None,
+                  interpret: bool = False):
+    """y = x @ dequant(words).  Pallas on TPU (or interpret=True for
+    validation); jnp reference elsewhere."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    M = x2.shape[0]
+    if (use_pallas or interpret) and M % 8 == 0:
+        bm = min(128, M)
+        y = kernel.packed_matmul(x2, words, scale, k=k, K=K,
+                                 block_m=bm, block_k=block_k,
+                                 interpret=interpret)
+    else:
+        y = ref.packed_matmul_ref(x2, words, scale, k=k, K=K, block_k=block_k)
+    return y.reshape(lead + (y.shape[-1],))

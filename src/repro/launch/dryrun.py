@@ -1,0 +1,209 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory / cost / collective analysis.
+
+The two lines above MUST run before any jax import (jax locks the device
+count on first init); do not move them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all                 # 40 cells, single-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod     # 512-chip pass
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCHS, SHAPES, get_config, supports_shape
+from ..distributed import steps as steps_lib
+from ..optim import adamw
+from . import hlo_analysis
+from .mesh import make_production_mesh
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6*N_active*D train / 2*N_active*D forward,
+    plus attention score/value and SSD-scan terms (not part of 6ND)."""
+    n = cfg.param_count()
+    if cfg.num_experts:
+        # embedding/head + attention stay dense; experts scale by top_k/E
+        expert = cfg.num_layers * cfg.num_experts * 3 * cfg.d_model * cfg.d_ff
+        n = n - expert + expert * cfg.top_k / cfg.num_experts
+    B, S = shape.global_batch, shape.seq_len
+
+    # attention "KV" flops (per fwd pass)
+    attn_fwd = 0.0
+    if cfg.family in ("dense", "moe"):
+        # QK + PV, causal => S^2/2 each
+        attn_fwd = cfg.num_layers * 2.0 * B * cfg.num_heads * cfg.head_dim * S * S * 0.5 * 2
+    elif cfg.family == "hybrid":
+        napps = (cfg.num_layers + cfg.hybrid_attn_every - 1) // cfg.hybrid_attn_every
+        attn_fwd = napps * 2.0 * B * cfg.num_heads * cfg.head_dim * S * S * 0.5 * 2
+    ssd_fwd = 0.0
+    if cfg.family in ("ssm", "hybrid"):
+        Q, N, din = cfg.ssm_chunk, cfg.ssm_state, cfg.d_inner
+        ssd_fwd = cfg.num_layers * 2.0 * B * S * (Q * N + Q * din + 2 * din * N)
+
+    if shape.kind == "train":
+        return 6.0 * n * B * S + 3.0 * (attn_fwd + ssd_fwd)
+    if shape.kind == "prefill":
+        return 2.0 * n * B * S + attn_fwd + ssd_fwd
+    # decode: one token per sequence; attention reads the whole cache
+    attn_dec = 0.0
+    if cfg.family in ("dense", "moe"):
+        attn_dec = cfg.num_layers * 4.0 * B * cfg.num_heads * cfg.head_dim * S
+    elif cfg.family == "hybrid":
+        napps = (cfg.num_layers + cfg.hybrid_attn_every - 1) // cfg.hybrid_attn_every
+        attn_dec = napps * 4.0 * B * cfg.num_heads * cfg.head_dim * S
+    ssd_dec = 0.0
+    if cfg.family in ("ssm", "hybrid"):
+        N, din = cfg.ssm_state, cfg.d_inner
+        ssd_dec = cfg.num_layers * 6.0 * B * din * N
+    return 2.0 * n * B + attn_dec + ssd_dec
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             skip_existing: bool = False):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    out_path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_tag}.json")
+    if skip_existing and os.path.exists(out_path):
+        print(f"[skip existing] {out_path}")
+        return True
+    if not supports_shape(cfg, shape):
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+               "skipped": True,
+               "reason": "long_500k needs sub-quadratic attention; "
+                         "full-attention arch (see DESIGN.md)"}
+        _write(out_path, rec)
+        print(f"[skip] {arch} x {shape_name}: full-attention arch")
+        return True
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            jitted, specs = steps_lib.build_train_step(cfg, shape, mesh)
+            model = specs["model"]
+            params_abs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            opt_abs = jax.eval_shape(adamw.init_state, params_abs)
+            batch_abs = steps_lib.input_specs(model.cfg, shape)
+            step_abs = jax.ShapeDtypeStruct((), jax.numpy.int32)
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs, step_abs)
+        elif shape.kind == "prefill":
+            jitted, specs = steps_lib.build_prefill_step(cfg, shape, mesh)
+            model = specs["model"]
+            params_abs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            inputs_abs = steps_lib.input_specs(cfg, shape)
+            lowered = jitted.lower(params_abs, inputs_abs)
+        else:
+            jitted, specs = steps_lib.build_decode_step(cfg, shape, mesh)
+            model = specs["model"]
+            params_abs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            io = steps_lib.input_specs(cfg, shape, model=model)
+            lowered = jitted.lower(params_abs, io["inputs"], io["cache"])
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        text = compiled.as_text()
+        costs = hlo_analysis.analyze(text)
+        terms = hlo_analysis.roofline_terms(costs)
+        chips = mesh.devices.size
+
+        mf = model_flops(cfg, shape)
+        hlo_flops_global = costs.flops * chips
+        rec = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+            "skipped": False, "chips": int(chips),
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "per_device_total": mem.argument_size_in_bytes
+                + mem.temp_size_in_bytes + mem.output_size_in_bytes
+                - mem.alias_size_in_bytes,
+            },
+            "xla_cost_analysis": {
+                "flops_per_device_loopbody_once": cost.get("flops"),
+                "bytes_accessed": cost.get("bytes accessed"),
+            },
+            "hlo": {
+                "flops_per_device": costs.flops,
+                "bytes_per_device": costs.bytes,
+                "convert_bytes_excluded": costs.convert_bytes,
+                "copy_bytes_excluded": costs.copy_bytes,
+                "collective_bytes_per_device": costs.collective_bytes,
+                "per_collective": costs.per_collective,
+                "num_collectives": costs.num_collectives,
+                "while_trips": costs.while_trips[:32],
+            },
+            "roofline": terms,
+            "model_flops_global": mf,
+            "hlo_flops_global": hlo_flops_global,
+            "useful_flops_ratio": mf / hlo_flops_global if hlo_flops_global else None,
+        }
+        _write(out_path, rec)
+        print(f"[ok] {arch} x {shape_name} x {mesh_tag}: "
+              f"compile={t_compile:.0f}s "
+              f"dom={terms['dominant']} "
+              f"c/m/coll={terms['compute_s']:.4f}/{terms['memory_s']:.4f}/"
+              f"{terms['collective_s']:.4f}s "
+              f"useful={rec['useful_flops_ratio'] and round(rec['useful_flops_ratio'], 3)}")
+        return True
+    except Exception as e:  # noqa: BLE001 - record the failure, keep sweeping
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        _write(out_path, rec)
+        print(f"[FAIL] {arch} x {shape_name} x {mesh_tag}: {type(e).__name__}: {e}")
+        return False
+
+
+def _write(path, rec):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    ok = True
+    for arch, shape in cells:
+        ok &= run_cell(arch, shape, args.multi_pod, args.out,
+                       skip_existing=args.skip_existing)
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,480 @@
+"""Post-SPMD HLO analysis for the roofline (FLOPs / bytes / collectives).
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified on
+this jax/XLA build: a scan of 10 matmuls reports the FLOPs of 1), so a
+layer-scanned model would be undercounted by ~num_layers.  This module
+parses ``compiled.as_text()`` (the partitioned, optimized module - shapes
+are PER-DEVICE) and:
+
+  * extracts while-loop trip counts from the loop-condition constants and
+    multiplies body costs through (composing across nested scans),
+  * counts MXU FLOPs from dot/convolution ops (2 * result_elems *
+    contracted_elems), recursing into fusion computations,
+  * estimates HBM traffic as sum(result + operand bytes) over top-level
+    instructions, treating each fusion as a single memory op (its
+    internals live in registers/VMEM), excluding pure plumbing opcodes,
+  * accounts collective wire bytes per device with ring-cost factors:
+      all-reduce        2x operand bytes   (reduce-scatter + all-gather)
+      all-gather        result bytes       (received)
+      reduce-scatter    operand bytes
+      all-to-all        operand bytes
+      collective-permute operand bytes
+
+Every count is per-device; multiply by device count for global totals.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id",
+    "replica-id", "iota", "rng-bit-generator",
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of a possibly-tuple HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_type: str
+    operands: List[str]
+    raw: str
+    calls: List[str] = field(default_factory=list)
+    body: Optional[str] = None
+    cond: Optional[str] = None
+
+
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_SIMPLE_TYPE_RE = re.compile(r"^([\w\[\]{},]+)\s+(.*)$")
+_OPCODE_RE = re.compile(r"^([\w\-]+)\((.*)$")
+
+
+def _parse_instr_line(s: str):
+    """-> (name, result_type, opcode, rest_after_open_paren) or None.
+
+    Handles tuple result types containing `/*index=N*/` comments by
+    balanced-paren scanning.
+    """
+    st = s.strip()
+    if st.startswith("ROOT "):
+        st = st[5:]
+    if not st.startswith("%"):
+        return None
+    eq = st.find(" = ")
+    if eq < 0:
+        return None
+    name = st[1:eq]
+    rhs = st[eq + 3:]
+    if rhs.startswith("("):
+        depth, i = 0, 0
+        while i < len(rhs):
+            if rhs[i] == "(":
+                depth += 1
+            elif rhs[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            i += 1
+        rtype, rest = rhs[: i + 1], rhs[i + 1:].lstrip()
+    else:
+        m = _SIMPLE_TYPE_RE.match(rhs)
+        if not m:
+            return None
+        rtype, rest = m.groups()
+    om = _OPCODE_RE.match(rest)
+    if not om:
+        return None
+    return name, rtype, om.group(1), om.group(2)
+
+
+def parse_module(text: str):
+    """-> (computation name -> instruction list,
+           computation name -> ordered parameter names)."""
+    comps: Dict[str, List[Instr]] = {}
+    comp_params: Dict[str, List[str]] = {}
+    current = None
+    for line in text.splitlines():
+        s = line.rstrip()
+        st = s.strip()
+        m = re.match(r"^(ENTRY\s+)?%([\w.\-]+)\s*\((.*)\)\s*->.*{", st)
+        if m and not st.startswith("ROOT") and "=" not in st.split("(")[0]:
+            current = "ENTRY" if m.group(1) else m.group(2)
+            comps[current] = []
+            comp_params[current] = [
+                p.split(":")[0].strip() for p in m.group(3).split(",") if ":" in p]
+            continue
+        if st == "}":
+            continue
+        if current is None:
+            continue
+        parsed = _parse_instr_line(s)
+        if parsed is None:
+            continue
+        name, rtype, opcode, rest = parsed
+        # operands: %refs inside the first balanced parens of `rest`
+        depth, i = 1, 0
+        while i < len(rest) and depth:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        inside, after = rest[: i - 1], rest[i - 1:]
+        ins = Instr(name=name, opcode=opcode, result_type=rtype.strip(),
+                    operands=_OPERAND_RE.findall(inside), raw=st)
+        for pat in (r"calls=%([\w.\-]+)", r"true_computation=%([\w.\-]+)",
+                    r"false_computation=%([\w.\-]+)",
+                    r"to_apply=%([\w.\-]+)"):
+            for cm in re.finditer(pat, after):
+                ins.calls.append(cm.group(1))
+        bc = re.search(r"branch_computations=\{([^}]*)\}", after)
+        if bc:
+            ins.calls.extend(_OPERAND_RE.findall(bc.group(1)))
+        bm = re.search(r"body=%([\w.\-]+)", after)
+        if bm:
+            ins.body = bm.group(1)
+        dm = re.search(r"condition=%([\w.\-]+)", after)
+        if dm:
+            ins.cond = dm.group(1)
+        comps[current].append(ins)
+    return comps, comp_params
+
+
+def _trip_count(comps, cond_name: str) -> int:
+    """Largest s32 scalar constant in the while condition computation."""
+    best = 1
+    for ins in comps.get(cond_name, []):
+        if ins.opcode == "constant" and ins.result_type.startswith("s32[]"):
+            m = re.search(r"constant\((-?\d+)\)", ins.raw)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(ins: Instr, name2type: Dict[str, str]) -> float:
+    _, rdims = _shape_elems(ins.result_type)
+    result_elems = math.prod(rdims) if rdims else 1
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.raw)
+    contract = 1
+    if m and ins.operands:
+        lhs_type = name2type.get(ins.operands[0], "")
+        _, ldims = _shape_elems(lhs_type)
+        for idx in (m.group(1).split(",") if m.group(1) else []):
+            i = int(idx)
+            if i < len(ldims):
+                contract *= ldims[i]
+    return 2.0 * result_elems * contract
+
+
+def _conv_flops(ins: Instr, name2type: Dict[str, str]) -> float:
+    _, rdims = _shape_elems(ins.result_type)
+    result_elems = math.prod(rdims) if rdims else 1
+    kernel = 1
+    if len(ins.operands) >= 2:
+        _, kdims = _shape_elems(name2type.get(ins.operands[1], ""))
+        kernel = math.prod(kdims) if kdims else 1
+        # depthwise convs: features counted in result already; approximate
+        # contracted size by spatial window * in_features_per_group.
+        _, odims = _shape_elems(ins.result_type)
+        if kdims and odims:
+            kernel = math.prod(kdims) / max(odims[-1], 1)
+            kernel = max(kernel, 1)
+    return 2.0 * result_elems * kernel
+
+
+@dataclass
+class HloCosts:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    convert_bytes: float = 0.0   # CPU-backend dtype-upcast artifacts (excluded)
+    copy_bytes: float = 0.0      # layout copies (mostly elided on TPU; excluded)
+    per_collective: Dict[str, float] = field(default_factory=dict)
+    num_collectives: Dict[str, int] = field(default_factory=dict)
+    while_trips: List[int] = field(default_factory=list)
+
+
+_SLICING = {"dynamic-slice", "slice", "gather"}
+_PURE_CONVERT = {"convert", "copy", "bitcast", "reshape", "transpose",
+                 "broadcast", "parameter", "constant"}
+
+
+def _fusion_is_pure_convert(ins: Instr, comps) -> bool:
+    """Detect dtype-upcast/layout-only fusions (bf16->f32 dot inputs on the
+    CPU backend - TPU executes bf16 MXU ops natively, so these are excluded
+    from the HBM term and reported separately)."""
+    inner = comps.get(ins.calls[0], []) if ins.calls else []
+    return bool(inner) and all(i.opcode in _PURE_CONVERT for i in inner)
+
+
+def _instr_hbm_bytes(ins: Instr, comps, comp_params, name2type):
+    """-> (bytes, bucket) where bucket in {'main', 'convert', 'copy'}.
+
+    In-place-aware HBM model: dynamic-slice/gather read only the slice;
+    dynamic-update-slice touches only the update (buffer aliased in
+    place); a fusion is one memory op - its parameters consumed only by
+    slicing ops count as slices (layer-stacked weights under scan), and a
+    parameter that is the in-place target of an inner dynamic-update-slice
+    counts as the update size.
+    """
+    op = ins.opcode
+    if op == "copy":
+        return float(2 * _shape_bytes(ins.result_type)), "copy"
+    if op == "convert":
+        return float(2 * _shape_bytes(ins.result_type)), "convert"
+    if op in _SLICING:
+        return float(2 * _shape_bytes(ins.result_type)), "main"
+    if op == "dynamic-update-slice":
+        upd = ins.operands[1] if len(ins.operands) > 1 else None
+        return (2.0 * _shape_bytes(name2type.get(upd, "")) if upd else 0.0,
+                "main")
+    if op == "scatter":
+        upd = ins.operands[2] if len(ins.operands) > 2 else None
+        idx = ins.operands[1] if len(ins.operands) > 1 else None
+        b = 0.0
+        if upd:
+            b += 2.0 * _shape_bytes(name2type.get(upd, ""))
+        if idx:
+            b += _shape_bytes(name2type.get(idx, ""))
+        return b, "main"
+    if op == "fusion" and ins.calls:
+        if _fusion_is_pure_convert(ins, comps):
+            return float(2 * _shape_bytes(ins.result_type)), "convert"
+        callee = ins.calls[0]
+        inner = comps.get(callee, [])
+        pnames = comp_params.get(callee, [])
+        by_name = {i2.name: i2 for i2 in inner}
+
+        def effective_uses(name, depth=0):
+            """Consumers of `name`, looking through convert/bitcast chains
+            (XLA:CPU inserts f32 upcasts around bf16 buffers; on TPU these
+            do not exist, so they must not hide the slicing structure)."""
+            uses = []
+            for i2 in inner:
+                if name in i2.operands:
+                    if i2.opcode in ("convert", "bitcast", "copy") and depth < 6:
+                        uses.extend(effective_uses(i2.name, depth + 1))
+                    else:
+                        uses.append(i2)
+            return uses
+
+        def root_through_converts():
+            r = inner[-1] if inner else None
+            seen = 0
+            while r is not None and r.opcode in ("convert", "bitcast", "copy") \
+                    and r.operands and seen < 6:
+                r = by_name.get(r.operands[0])
+                seen += 1
+            return r
+
+        # writes: in-place dynamic-update-slice roots count the update only
+        total = float(_shape_bytes(ins.result_type))
+        root = root_through_converts()
+        if root is not None and root.opcode == "dynamic-update-slice":
+            upd = root.operands[1] if len(root.operands) > 1 else None
+            ub = _shape_bytes(name2type.get(upd, "")) if upd else 0
+            if ub:
+                total = float(ub)
+        # reads
+        for pos, operand in enumerate(ins.operands):
+            full = float(_shape_bytes(name2type.get(operand, "")))
+            if pos < len(pnames):
+                pname = pnames[pos]
+                uses = effective_uses(pname)
+                if uses and all(u.opcode in _SLICING for u in uses):
+                    total += sum(float(_shape_bytes(u.result_type))
+                                 for u in uses)
+                    continue
+                if uses and all(
+                        u.opcode == "dynamic-update-slice" and
+                        u.operands for u in uses):
+                    # in-place target of an inner DUS: touched bytes = update
+                    total += sum(
+                        float(_shape_bytes(name2type.get(u.operands[1], "")))
+                        for u in uses if len(u.operands) > 1)
+                    continue
+            total += full
+        return total, "main"
+    return (float(sum(_shape_bytes(name2type.get(o, "")) for o in ins.operands)
+                  + _shape_bytes(ins.result_type)), "main")
+
+
+def analyze(text: str) -> HloCosts:
+    comps, comp_params = parse_module(text)
+    name2type: Dict[str, str] = {}
+    for instrs in comps.values():
+        for ins in instrs:
+            name2type[ins.name] = ins.result_type
+    out = HloCosts(per_collective=defaultdict(float),
+                   num_collectives=defaultdict(int))
+
+    def flops_of_comp(cname: str, mult: float, seen) -> float:
+        total = 0.0
+        seen = seen | {cname}
+        for ins in comps.get(cname, []):
+            if ins.opcode == "dot":
+                total += mult * _dot_flops(ins, name2type)
+            elif ins.opcode == "convolution":
+                total += mult * _conv_flops(ins, name2type)
+            for callee in ins.calls:
+                if callee in comps and callee not in seen:
+                    total += flops_of_comp(callee, mult, seen)
+        return total
+
+    def walk(cname: str, mult: float):
+        for ins in comps.get(cname, []):
+            op = ins.opcode
+            if op == "while" and ins.body:
+                trips = _trip_count(comps, ins.cond) if ins.cond else 1
+                out.while_trips.append(trips)
+                walk(ins.body, mult * trips)
+                continue
+            if op == "conditional":
+                # count every branch once (upper bound of one taken branch)
+                for callee in ins.calls:
+                    walk(callee, mult)
+                continue
+            # ---- FLOPs ----
+            if op == "dot":
+                out.flops += mult * _dot_flops(ins, name2type)
+            elif op == "convolution":
+                out.flops += mult * _conv_flops(ins, name2type)
+            elif op == "fusion":
+                for callee in ins.calls:
+                    out.flops += flops_of_comp(callee, mult, set())
+            # ---- collectives ----
+            if op in _COLLECTIVES or any(op.startswith(c + ".") for c in _COLLECTIVES):
+                base = op.split(".")[0]
+                operand_bytes = sum(_shape_bytes(name2type.get(o, ""))
+                                    for o in ins.operands)
+                result_bytes = _shape_bytes(ins.result_type)
+                if base == "all-reduce":
+                    wire = 2.0 * operand_bytes
+                elif base == "all-gather":
+                    wire = float(result_bytes)
+                else:
+                    wire = float(operand_bytes)
+                out.per_collective[base] += mult * wire
+                out.num_collectives[base] += int(mult)
+                out.collective_bytes += mult * wire
+                continue
+            # ---- memory ----
+            if op in _SKIP_BYTES:
+                continue
+            b, bucket = _instr_hbm_bytes(ins, comps, comp_params, name2type)
+            if bucket == "convert":
+                out.convert_bytes += mult * b
+            elif bucket == "copy":
+                out.copy_bytes += mult * b
+            else:
+                out.bytes += mult * b
+
+    walk("ENTRY", 1.0)
+    out.per_collective = dict(out.per_collective)
+    out.num_collectives = dict(out.num_collectives)
+    return out
+
+
+def top_contributors(text: str, kind: str = "bytes", n: int = 15):
+    """Ranked (contribution, opcode, loop-path, shape, op_name) list -
+    the profiling view for the Sec. Perf hypothesis loop."""
+    comps, comp_params = parse_module(text)
+    name2type: Dict[str, str] = {}
+    for instrs in comps.values():
+        for ins in instrs:
+            name2type[ins.name] = ins.result_type
+    # reuse analyze()'s helpers by re-running a tagged walk
+    acc: Dict[tuple, float] = defaultdict(float)
+
+    def shape_of(ins):
+        return ins.result_type.split("{")[0][:40]
+
+    def meta_of(ins):
+        m = re.search(r'op_name="([^"]*)"', ins.raw)
+        return m.group(1)[-70:] if m else ""
+
+    def walk(cname, mult, path):
+        for ins in comps.get(cname, []):
+            op = ins.opcode
+            if op == "while" and ins.body:
+                trips = _trip_count(comps, ins.cond) if ins.cond else 1
+                walk(ins.body, mult * trips, path + f">w{trips}")
+                continue
+            if op == "conditional":
+                for c in ins.calls:
+                    walk(c, mult, path + ">c")
+                continue
+            base = op.split(".")[0]
+            is_coll = base in [c for c in _COLLECTIVES]
+            if kind == "collective" and is_coll:
+                ob = sum(_shape_bytes(name2type.get(o, "")) for o in ins.operands)
+                rb = _shape_bytes(ins.result_type)
+                wire = 2 * ob if base == "all-reduce" else \
+                    (rb if base == "all-gather" else ob)
+                acc[(base, path, shape_of(ins), meta_of(ins))] += mult * wire
+            elif kind == "bytes" and not is_coll and op not in _SKIP_BYTES:
+                b, bucket = _instr_hbm_bytes(ins, comps, comp_params, name2type)
+                if bucket == "main":
+                    acc[(op, path, shape_of(ins), meta_of(ins))] += mult * b
+            elif kind == "flops" and op in ("dot", "convolution"):
+                f = _dot_flops(ins, name2type) if op == "dot" else \
+                    _conv_flops(ins, name2type)
+                acc[(op, path, shape_of(ins), meta_of(ins))] += mult * f
+    walk("ENTRY", 1.0, "E")
+    return sorted(((v,) + k for k, v in acc.items()), reverse=True)[:n]
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (TPU v5e constants per the assignment)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+
+def roofline_terms(costs: HloCosts) -> Dict[str, float]:
+    """Seconds per step, per the three-term roofline (per-device counts)."""
+    t_compute = costs.flops / PEAK_FLOPS
+    t_memory = costs.bytes / HBM_BW
+    t_collective = costs.collective_bytes / LINK_BW
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_collective), key=lambda kv: kv[1])[0]
+    return {"compute_s": t_compute, "memory_s": t_memory,
+            "collective_s": t_collective, "dominant": dominant}

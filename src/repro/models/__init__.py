@@ -1,0 +1,2 @@
+"""Model zoo: composable LM definitions for all assigned architectures."""
+from .model import Model, make_model, init_params

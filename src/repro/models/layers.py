@@ -1,0 +1,94 @@
+"""Shared neural building blocks (norms, activations, RoPE, linear)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.nesting import NestedTensor
+
+
+def pdot(x, w, precision=None, preferred=None):
+    """Matmul emitting the input dtype (TPU MXU accumulates f32 internally
+    and rounds on output, so a bf16-out dot is f32-accumulated on the
+    target hardware).  Emitting bf16 keeps the Megatron-TP partial-sum
+    all-reduces at 2 bytes/elem instead of 4 (§Perf change P2)."""
+    return jnp.matmul(x, w, preferred_element_type=preferred,
+                      precision=precision)
+
+
+def resolve_weight(w, dtype):
+    """NestedTensor leaves are dequantized on the fly (jnp reference path;
+    the Pallas packed_matmul kernel is the TPU fast path, see kernels/)."""
+    if isinstance(w, NestedTensor):
+        return w.full_bit(dtype)
+    return w
+
+
+def linear(x: jax.Array, w, b=None) -> jax.Array:
+    w = resolve_weight(w, x.dtype).astype(x.dtype)
+    y = pdot(x, w)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y.astype(x.dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm(x, params, kind: str):
+    if kind == "rmsnorm":
+        return rms_norm(x, params["scale"])
+    return layer_norm(x, params["scale"], params["bias"])
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                    # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mlp(x, params, act: str):
+    if act == "swiglu":
+        g = linear(x, params["w_gate"]["w"])
+        u = linear(x, params["w_up"]["w"])
+        return linear(silu(g) * u, params["w_down"]["w"])
+    u = linear(x, params["w_up"]["w"])
+    return linear(gelu(u), params["w_down"]["w"])

@@ -1,0 +1,187 @@
+"""Mamba2 / SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Chunked SSD algorithm: within-chunk quadratic "attention-form" compute on
+Q-length chunks (MXU-friendly), sequential lax.scan over chunk states for
+the inter-chunk recurrence.  Decode is the O(1) state update.
+
+Shapes (single B/C group, per the Mamba2 reference):
+  x:  (b, s, H, P)   dt: (b, s, H)   A: (H,) < 0
+  B, C: (b, s, N)    state: (b, H, P, N)
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.ctx import shard_hint
+from .layers import linear, rms_norm, silu
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d (width w) over (b, s, c)
+# ---------------------------------------------------------------------------
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B,S,C); w: (W,C); b: (C,)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32), w[:, None, :].astype(jnp.float32),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def conv_step(x_t: jax.Array, buf: jax.Array, w: jax.Array, b: jax.Array):
+    """Decode: x_t (B,C), buf (B,W-1,C) holds previous inputs. Returns
+    (y_t (B,C), new_buf)."""
+    W = w.shape[0]
+    window = jnp.concatenate([buf, x_t[:, None, :]], axis=1)      # (B,W,C)
+    y = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                   w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return y.astype(x_t.dtype), window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD scan
+# ---------------------------------------------------------------------------
+def ssd_chunked(x, dt, A, B, C, chunk: int,
+                init_state=None) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (b,s,H,P), final_state (b,H,P,N))."""
+    b, s, H, P = x.shape
+    N = B.shape[-1]
+    s_orig = s
+    if s % chunk:
+        # Right-pad with dt=0 steps: decay exp(0)=1 and update dt*x=0, so
+        # both the outputs of real positions (causal) and the final state
+        # are unaffected.
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc, Q = s // chunk, chunk
+    xr = x.reshape(b, nc, Q, H, P).astype(jnp.float32)
+    dtr = dt.reshape(b, nc, Q, H).astype(jnp.float32)
+    Br = B.reshape(b, nc, Q, N).astype(jnp.float32)
+    Cr = C.reshape(b, nc, Q, N).astype(jnp.float32)
+
+    a = dtr * A[None, None, None, :]                  # (b,nc,Q,H), negative
+    cum = jnp.cumsum(a, axis=2)                       # inclusive cumsum
+    # intra-chunk decay L_ij = exp(cum_i - cum_j), j <= i
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (b,nc,Q,Q,H) i,j
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cr, Br)           # (b,nc,Q,Q)
+    G = scores[..., None] * L * dtr[:, :, None, :, :]        # (b,nc,Q,Q,H)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", G, xr)
+
+    # chunk summary states: S_c = sum_j exp(cum_last - cum_j) dt_j x_j B_j
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)             # (b,nc,Q,H)
+    states = jnp.einsum("bcjh,bcjn,bcjhp->bchpn",
+                        decay_out * dtr, Br, xr)             # (b,nc,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (b,nc,H)
+
+    h0 = (jnp.zeros((b, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(h, inp):
+        s_c, d_c = inp                                       # (b,H,P,N), (b,H)
+        h_out = h                                            # state at chunk start
+        h_next = h * d_c[:, :, None, None] + s_c
+        return h_next, h_out
+
+    hT, h_starts = jax.lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_starts = jnp.moveaxis(h_starts, 0, 1)                  # (b,nc,H,P,N)
+
+    # inter-chunk contribution: y_off_i = exp(cum_i) * C_i . H_chunkstart
+    y_off = jnp.einsum("bcih,bcin,bchpn->bcihp",
+                       jnp.exp(cum), Cr, h_starts)
+    y = (y_diag + y_off).reshape(b, s, H, P)[:, :s_orig]
+    return y, hT
+
+
+def ssd_decode_step(x_t, dt_t, A, B_t, C_t, state):
+    """x_t: (b,H,P), dt_t: (b,H), B_t/C_t: (b,N), state: (b,H,P,N)."""
+    state = state.astype(jnp.float32)
+    dA = jnp.exp(dt_t.astype(jnp.float32) * A[None, :])      # (b,H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt_t.astype(jnp.float32),
+                     B_t.astype(jnp.float32), x_t.astype(jnp.float32))
+    new_state = state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C_t.astype(jnp.float32))
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# full Mamba2 block
+# ---------------------------------------------------------------------------
+def _split_proj(zxbcdt, din: int, N: int, H: int):
+    z = zxbcdt[..., :din]
+    xBC = zxbcdt[..., din:2 * din + 2 * N]
+    dt = zxbcdt[..., 2 * din + 2 * N:]
+    assert dt.shape[-1] == H
+    return z, xBC, dt
+
+
+def mamba_block(u: jax.Array, params: Dict, cfg,
+                init_state=None) -> Tuple[jax.Array, Dict]:
+    """u: (B,S,d) -> (y (B,S,d), cache {state, conv_buf})."""
+    Bsz, S, d = u.shape
+    din, N, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_headdim
+    H = cfg.ssm_heads
+    zxbcdt = linear(u, params["in_proj"]["w"])
+    z, xBC, dt = _split_proj(zxbcdt, din, N, H)
+    xBC = silu(causal_conv1d(xBC, params["conv"]["w"], params["conv"]["b"]))
+    x = xBC[..., :din].reshape(Bsz, S, H, P)
+    B_mat = xBC[..., din:din + N]
+    C_mat = xBC[..., din + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    x = shard_hint(x, ("batch", None, "heads", None))
+    y, state = ssd_chunked(x, dt, A, B_mat, C_mat, cfg.ssm_chunk,
+                           init_state=init_state)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * \
+        x.astype(jnp.float32)
+    y = y.reshape(Bsz, S, din).astype(u.dtype)
+    y = rms_norm(y * silu(z), params["ssm_norm"]["scale"])
+    out = linear(y, params["out_proj"]["w"])
+    cache = {"state": state.astype(jnp.float32),
+             "conv_buf": xBC_raw_tail(u, zxbcdt, din, N, cfg)}
+    return out, cache
+
+
+def xBC_raw_tail(u, zxbcdt, din, N, cfg):
+    """Last (conv_width - 1) pre-conv xBC inputs (decode conv buffer)."""
+    xBC_raw = zxbcdt[..., din:2 * din + 2 * N]
+    return xBC_raw[:, -(cfg.ssm_conv_width - 1):, :]
+
+
+def mamba_decode_step(u_t: jax.Array, params: Dict, cache: Dict,
+                      cfg) -> Tuple[jax.Array, Dict]:
+    """u_t: (B,1,d) -> (y (B,1,d), new cache)."""
+    Bsz = u_t.shape[0]
+    din, N, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_headdim
+    H = cfg.ssm_heads
+    zxbcdt = linear(u_t[:, 0, :], params["in_proj"]["w"])
+    z, xBC_raw, dt = _split_proj(zxbcdt, din, N, H)
+    xBC, conv_buf = conv_step(xBC_raw, cache["conv_buf"],
+                              params["conv"]["w"], params["conv"]["b"])
+    xBC = silu(xBC)
+    x = xBC[..., :din].reshape(Bsz, H, P)
+    B_t = xBC[..., din:din + N]
+    C_t = xBC[..., din + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, state = ssd_decode_step(x, dt, A, B_t, C_t, cache["state"])
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * \
+        x.astype(jnp.float32)
+    y = y.reshape(Bsz, din).astype(u_t.dtype)
+    y = rms_norm(y * silu(z), params["ssm_norm"]["scale"])
+    out = linear(y, params["out_proj"]["w"])[:, None, :]
+    return out, {"state": state, "conv_buf": conv_buf}

@@ -1,0 +1,170 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based capacity dispatch.
+
+GShard/Switch-style "dropping" implementation, XLA/TPU-friendly: tokens are
+argsorted by assigned expert, given a position-in-expert via the sorted
+prefix, dropped beyond the per-expert capacity C, and gathered into a dense
+(E, C, d) tensor for grouped einsum matmuls.
+
+Distribution (§Perf change P1, see EXPERIMENTS.md): the gather/scatter of
+the dispatch is wrapped in ``shard_map`` over the data-parallel axes, so
+each data shard routes ONLY its own tokens with a local capacity
+C_local = C / dp - the gather and combine scatter-add are provably local.
+Under plain GSPMD the same global gather lowered to a full all-gather of
+the (T, d) token buffer plus an all-reduce of the scatter (observed 7.2 of
+8.6 TB/device collective wire on llama4-scout train_4k).  The only EP
+communication left is the all-gather of expert outputs over the ``model``
+axis (the minimal token<->expert exchange), and its mirror in backward.
+
+FLOPs are honest: 2*E*C*(3*d*ff) per layer = tokens*top_k*cf*(3*d*ff)*2.
+Per-shard capacity changes the drop pattern vs global capacity under
+imbalance - the standard trade of grouped dispatch (GShard groups).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..distributed import ctx
+from ..distributed.ctx import shard_hint
+from .layers import linear, pdot, resolve_weight, silu
+
+
+def capacity(tokens: int, num_experts: int, top_k: int, factor: float,
+             multiple: int = 8) -> int:
+    c = math.ceil(tokens * top_k * factor / num_experts)
+    return max(multiple, math.ceil(c / multiple) * multiple)
+
+
+# ---------------------------------------------------------------------------
+# dispatch core (runs globally on one device, or per data shard in shard_map)
+# ---------------------------------------------------------------------------
+def _dispatch(xf, router_w, *, E: int, K: int, C: int):
+    """xf: (T, d) -> (xg (E,C,d), table (E*C,), gates (E*C,), aux)."""
+    T, d = xf.shape
+    logits = pdot(xf, router_w.astype(xf.dtype), preferred=jnp.float32)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)                  # (T,K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balancing aux loss (Switch):  E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32), axis=1),
+        axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    ef = expert_idx.reshape(T * K)
+    tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    gf = gate_vals.reshape(T * K)
+    order = jnp.argsort(ef, stable=True)
+    se, st, sg = ef[order], tok[order], gf[order]
+    starts = jnp.searchsorted(se, jnp.arange(E), side="left")
+    pos = jnp.arange(T * K, dtype=jnp.int32) - starts[se].astype(jnp.int32)
+    keep = pos < C
+    slot = jnp.where(keep, se.astype(jnp.int32) * C + pos, E * C)
+
+    table = jnp.full((E * C + 1,), T, jnp.int32).at[slot].set(st)[: E * C]
+    gates = jnp.zeros((E * C + 1,), jnp.float32).at[slot].set(sg)[: E * C]
+    xp = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+    xg = xp[table].reshape(E, C, d)
+    return xg, table, gates, aux
+
+
+def _combine(y, table, gates, T: int, d: int):
+    """y: (E,C,d) -> (T,d) scatter-add with gate weights."""
+    E, C, _ = y.shape
+    yf = y.reshape(E * C, d) * gates[:, None].astype(y.dtype)
+    return jnp.zeros((T + 1, d), y.dtype).at[table].add(yf)[:T]
+
+
+# ---------------------------------------------------------------------------
+# public MoE FFN
+# ---------------------------------------------------------------------------
+def moe_ffn(x: jax.Array, params: Dict, *, num_experts: int, top_k: int,
+            capacity_factor: float, act: str = "swiglu",
+            cap_multiple: int = 8) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss)."""
+    B, S, d = x.shape
+    T = B * S
+    E, K = num_experts, top_k
+    xf = x.reshape(T, d)
+    rw = params["router"]["w"]
+
+    cur = ctx.current()
+    dp_axes = None
+    if cur is not None:
+        mesh, rules = cur
+        b_ax = rules.get("batch")
+        if b_ax:
+            dp_axes = b_ax if isinstance(b_ax, tuple) else (b_ax,)
+
+    if dp_axes:
+        dpsz = 1
+        for a in dp_axes:
+            dpsz *= mesh.shape[a]
+        if T % dpsz == 0:
+            C_loc = capacity(T // dpsz, E, K, capacity_factor, cap_multiple)
+            xg, table, gates, aux = _sharded_dispatch(
+                mesh, dp_axes, xf, rw, E=E, K=K, C=C_loc)
+            y = _expert_compute(xg, params, act, x.dtype)
+            y = shard_hint(y, (None, "expert_cap", None))   # gather E over model
+            out = _sharded_combine(mesh, dp_axes, y, table, gates,
+                                   T_loc=T // dpsz, d=d)
+            return out.reshape(B, S, d), aux
+        # fall through to the global path when tokens don't split evenly
+
+    C = capacity(T, E, K, capacity_factor, cap_multiple)
+    xg, table, gates, aux = _dispatch(xf, rw, E=E, K=K, C=C)
+    xg = shard_hint(xg, ("experts", "expert_cap", None))
+    y = _expert_compute(xg, params, act, x.dtype)
+    out = _combine(y, table, gates, T, d)
+    return out.reshape(B, S, d), aux
+
+
+def _expert_compute(xg, params, act, dtype):
+    wg = resolve_weight(params["experts"]["w_gate"]["w"], dtype).astype(dtype)
+    wu = resolve_weight(params["experts"]["w_up"]["w"], dtype).astype(dtype)
+    wd = resolve_weight(params["experts"]["w_down"]["w"], dtype).astype(dtype)
+    xg = xg.astype(dtype)
+    if act == "swiglu":
+        h = silu(jnp.einsum("ecd,edf->ecf", xg, wg)) * \
+            jnp.einsum("ecd,edf->ecf", xg, wu)
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xg, wu))
+    h = h.astype(dtype)
+    return jnp.einsum("ecf,efd->ecd", h, wd).astype(dtype)
+
+
+def _sharded_dispatch(mesh, dp_axes, xf, rw, *, E, K, C):
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def local(xf_loc, rw_loc):
+        xg, table, gates, aux = _dispatch(xf_loc, rw_loc, E=E, K=K, C=C)
+        aux = jax.lax.pmean(aux, dp)
+        return xg.astype(xf_loc.dtype), table, gates, aux
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(dp, None), P(None, None)),
+        out_specs=(P(None, dp, None), P(dp), P(dp), P()),
+        check_vma=False,
+    )(xf, rw)
+
+
+def _sharded_combine(mesh, dp_axes, y, table, gates, *, T_loc, d):
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def local(y_loc, table_loc, gates_loc):
+        return _combine(y_loc, table_loc, gates_loc, T_loc, d)
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, dp, None), P(dp), P(dp)),
+        out_specs=P(dp, None),
+        check_vma=False,
+    )(y, table, gates)

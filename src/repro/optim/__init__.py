@@ -1,0 +1,1 @@
+from .adamw import AdamWState, init_state, apply_update, warmup_cosine, global_norm

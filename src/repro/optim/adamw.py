@@ -1,0 +1,75 @@
+"""AdamW + global-norm clipping + warmup-cosine schedule (pure JAX).
+
+optax is not available in the container; this is a small, exact AdamW with
+f32 first/second-moment state regardless of parameter dtype (mixed-precision
+realistic: bf16/float32 params, f32 optimizer state).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    master: Any      # f32 master weights (mixed-precision training: params
+                     # may be bf16 so FSDP gathers/collectives ship 2 bytes)
+
+
+def init_state(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros), master=master)
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / max(warmup, 1)
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def apply_update(params, grads, state: AdamWState, *, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 max_grad_norm: float = 1.0) -> Tuple[Any, AdamWState, Dict]:
+    grads, gn = clip_by_global_norm(grads, max_grad_norm)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v, w32):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay and p.ndim >= 2:            # decay matmul weights only
+            delta = delta + weight_decay * w32
+        new_master = w32 - lr * delta
+        return new_master.astype(p.dtype), m, v, new_master
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v, state.master)
+    pick = lambda i: jax.tree.map(lambda t4: t4[i], out,  # noqa: E731
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), AdamWState(step, pick(1), pick(2), pick(3)), \
+        {"grad_norm": gn, "lr": lr}

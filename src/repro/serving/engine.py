@@ -1,0 +1,109 @@
+"""Serving engine: batched requests, prefill/decode, NestQuant switching.
+
+The engine owns (a) a :class:`NestQuantStore` (packed weights + switching
+state machine) and (b) the jitted prefill/decode steps.  A memory-budget
+signal drives full-bit <-> part-bit switching at request boundaries - the
+paper's IoT page-in/page-out story mapped to accelerator-HBM residency
+(DESIGN.md Sec. 3): downgrading frees bytes(w_low) of HBM immediately and
+costs nothing to transport; upgrading pages w_low back in.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..core.switching import NestQuantStore
+from ..models.model import Model, make_model
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = field(default_factory=list)
+
+
+@dataclass
+class EngineStats:
+    prefills: int = 0
+    decode_steps: int = 0
+    switches: int = 0
+    mode_history: List[str] = field(default_factory=list)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, store: NestQuantStore,
+                 max_batch: int = 8, max_len: int = 128):
+        self.cfg = cfg
+        self.model = make_model(cfg)
+        self.store = store
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.stats = EngineStats()
+        self._params = None
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,))
+
+    # -- switching ---------------------------------------------------------
+    def ensure_mode(self, memory_budget_bytes: Optional[int] = None):
+        """Pick full/part-bit from the HBM budget; (re)materialize weights."""
+        want = "full"
+        if memory_budget_bytes is not None:
+            b = self.store.bytes()
+            full_need = b["high"] + b["low"] + b["scales"] + b["fp"]
+            if full_need > memory_budget_bytes:
+                want = "part"
+        if want != self.store.mode or self._params is None:
+            if want == "full":
+                self.store.to_full()
+            else:
+                self.store.to_part()
+            self._params = self.store.params()
+            self.stats.switches += 1
+        self.stats.mode_history.append(self.store.mode)
+        return self.store.mode
+
+    # -- serving -----------------------------------------------------------
+    def generate(self, requests: List[Request],
+                 memory_budget_bytes: Optional[int] = None) -> List[Request]:
+        """Greedy-decode a batch of requests with the current mode."""
+        assert len(requests) <= self.max_batch
+        self.ensure_mode(memory_budget_bytes)
+        params = self._params
+        B = len(requests)
+        S = max(len(r.prompt) for r in requests)
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, S - len(r.prompt):] = r.prompt       # left-pad
+        logits, cache = self._prefill(params, {"tokens": jnp.asarray(toks)})
+        self.stats.prefills += 1
+        # re-home the cache into a max_len buffer
+        full = self.model.make_cache(B, self.max_len,
+                                     dtype=jnp.dtype(self.cfg.compute_dtype))
+        for key, v in cache.items():
+            if key == "pos":
+                full["pos"] = v
+            elif key in ("k", "v") and v.shape[-3] == S:
+                full[key] = jax.lax.dynamic_update_slice(
+                    full[key].astype(v.dtype), v, (0,) * v.ndim)
+            else:
+                full[key] = v
+        cache = full
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        n_steps = max(r.max_new_tokens for r in requests)
+        for _ in range(n_steps):
+            for i, r in enumerate(requests):
+                if len(r.out_tokens) < r.max_new_tokens:
+                    r.out_tokens.append(int(next_tok[i, 0]))
+            logits, cache = self._decode(params, {"tokens": next_tok}, cache)
+            self.stats.decode_steps += 1
+            next_tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        return requests

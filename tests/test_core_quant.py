@@ -1,0 +1,181 @@
+"""Unit + property tests for the NestQuant core (the paper's contribution)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (adaptive_round, case_metric, compute_scale, decompose,
+                        dequantize, int_range, nest_quantize,
+                        numerical_error_table, pack, packed_rows, per_word,
+                        quantize_rtn, recompose, sqnr_db, unpack)
+from repro.core.packing import pack_blocked, unpack_blocked
+
+
+# ---------------------------------------------------------------------------
+# linear quantizer
+# ---------------------------------------------------------------------------
+def test_quantize_dequantize_roundtrip_bound():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+    for n in (8, 6, 4):
+        s = compute_scale(w, n, channel_axis=1)
+        q = quantize_rtn(w, s, n)
+        lo, hi = int_range(n)
+        assert int(q.min()) >= lo and int(q.max()) <= hi
+        # RTN error bounded by scale/2 away from clip range
+        err = jnp.abs(w - dequantize(q, s))
+        assert float(jnp.max(err / s)) <= 0.5 + 1e-5
+
+
+def test_scale_positive_and_covers_max():
+    w = jnp.asarray([[1.0, -3.0], [0.5, 2.0]], jnp.float32)
+    s = compute_scale(w, 8, channel_axis=1)
+    assert s.shape == (1, 2)
+    np.testing.assert_allclose(np.asarray(s)[0], [1.0 / 127, 3.0 / 127],
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# SQuant-style adaptive rounding
+# ---------------------------------------------------------------------------
+def test_adaptive_rounding_reduces_case():
+    rng = np.random.default_rng(1)
+    v = jnp.asarray(rng.normal(size=(32, 257)).astype(np.float32)) * 20
+    q_rtn = jnp.round(v)
+    q_ad = adaptive_round(v, 8)
+    assert float(jnp.mean(case_metric(v, q_ad))) <= \
+        float(jnp.mean(case_metric(v, q_rtn)))
+    assert float(jnp.max(case_metric(v, q_ad))) <= 0.5 + 1e-4
+
+
+def test_adaptive_rounding_stays_in_floor_ceil():
+    """Structural constraint for the (l+1)-bit compensation (Sec 3.3.2)."""
+    rng = np.random.default_rng(2)
+    v = jnp.asarray(rng.normal(size=(16, 100)).astype(np.float32)) * 30
+    q = adaptive_round(v, 8).astype(jnp.float32)
+    assert bool(jnp.all((q >= jnp.floor(v)) & (q <= jnp.ceil(v))))
+
+
+# ---------------------------------------------------------------------------
+# decomposition / recomposition (Eqs. 6-11, Table 7)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [8, 6])
+@pytest.mark.parametrize("method", ["bitshift", "rtn", "adaptive"])
+def test_lossless_recompose_with_compensation(n, method):
+    lo, hi = int_range(n)
+    codes = jnp.arange(lo, hi + 1, dtype=jnp.int32)[:, None] * \
+        jnp.ones((1, 8), jnp.int32)
+    for h in range(3, n):
+        wh, wl = decompose(codes, n, h, method=method, compensate=True)
+        assert bool(jnp.array_equal(recompose(wh, wl, n, h), codes)), (n, h)
+        lo_h, hi_h = int_range(h)
+        assert int(wh.min()) >= lo_h and int(wh.max()) <= hi_h
+        lo_l, hi_l = int_range(n - h + 1)
+        assert int(wl.min()) >= lo_l and int(wl.max()) <= hi_l
+
+
+def test_table7_numerical_errors_match_paper():
+    """Paper Table 7: exact #non-zero and ranges for BitShift and RTN."""
+    tab = numerical_error_table(8, methods=("bitshift", "rtn", "adaptive"))
+    for h in (7, 6, 5, 4, 3):
+        l = 8 - h
+        assert tab["bitshift"][h]["nonzero"] == 128
+        assert tab["bitshift"][h]["range"] == (0, 2 ** (l - 1))
+    rtn_nonzero = {7: 65, 6: 34, 5: 20, 4: 16, 3: 20}
+    for h, expect in rtn_nonzero.items():
+        assert tab["rtn"][h]["nonzero"] == expect
+        assert tab["rtn"][h]["range"] == (0, 2 ** (8 - h - 1))
+    # adaptive rounding errors lie in the Table 7 law [-2^(l-1)+1, 2^(l-1)]
+    for h in (7, 6, 5, 4, 3):
+        l = 8 - h
+        lo_e, hi_e = tab["adaptive"][h]["range"]
+        assert lo_e >= -(2 ** (l - 1)) + 1 and hi_e <= 2 ** (l - 1)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(3, 7), st.integers(0, 2 ** 32 - 1))
+def test_property_decompose_recompose_random(h, seed):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(-128, 128, size=(17, 9)), jnp.int32)
+    for method in ("bitshift", "rtn", "adaptive"):
+        wh, wl = decompose(codes, 8, h, method=method, compensate=True)
+        assert bool(jnp.array_equal(recompose(wh, wl, 8, h), codes))
+
+
+# ---------------------------------------------------------------------------
+# packed-bit tensors
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 200), st.integers(1, 5),
+       st.integers(0, 2 ** 31 - 1))
+def test_property_pack_unpack_roundtrip(k, K, cols, seed):
+    rng = np.random.default_rng(seed)
+    lo, hi = int_range(k)
+    x = jnp.asarray(rng.integers(lo, hi + 1, size=(K, cols)), jnp.int32)
+    words = pack(x, k, axis=0)
+    assert words.shape == (packed_rows(K, k), cols)
+    assert bool(jnp.array_equal(unpack(words, k, K, axis=0), x))
+
+
+@pytest.mark.parametrize("k", [3, 4, 5, 8])
+def test_pack_blocked_roundtrip_and_size(k):
+    rng = np.random.default_rng(0)
+    lo, hi = int_range(k)
+    x = jnp.asarray(rng.integers(lo, hi + 1, size=(1024, 16)), jnp.int32)
+    words = pack_blocked(x, k, 512, axis=0)
+    assert bool(jnp.array_equal(unpack_blocked(words, k, 1024, 512, axis=0), x))
+    # same capacity as the flat layout
+    assert words.shape[0] == 2 * packed_rows(512, k)
+
+
+def test_packing_axis_generality():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.integers(-8, 8, size=(4, 60, 5)), jnp.int32)
+    words = pack(x, 4, axis=1)
+    assert bool(jnp.array_equal(unpack(words, 4, 60, axis=1), x))
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 end-to-end
+# ---------------------------------------------------------------------------
+def test_nest_quantize_full_bit_equals_direct_int8():
+    """Full-bit model == the INT-n model bit-for-bit (paper's key claim)."""
+    rng = np.random.default_rng(4)
+    w = jnp.asarray(rng.normal(size=(256, 128)).astype(np.float32))
+    nt = nest_quantize(w, n=8, h=4)
+    # the nested scale matches a direct per-channel quantization
+    s = compute_scale(w, 8, channel_axis=1)
+    np.testing.assert_allclose(np.asarray(nt.scale), np.asarray(s), rtol=1e-6)
+    codes = nt.codes_full()
+    lo, hi = int_range(8)
+    assert int(codes.min()) >= lo and int(codes.max()) <= hi
+    # quality ordering: full-bit strictly better than part-bit
+    sq_full = float(sqnr_db(w, nt.full_bit(jnp.float32)))
+    sq_part = float(sqnr_db(w, nt.part_bit(jnp.float32)))
+    assert sq_full > sq_part > 5.0
+    assert sq_full > 35.0
+
+
+def test_nest_quantize_part_bit_adaptive_beats_bitshift():
+    """Paper Table 6 ordering: adaptive >> RTN >> BitShift for the part-bit
+    model.  The SQuant/CASE objective targets OUTPUT error under inputs with
+    non-zero mean (post-activation statistics), not weight-space MSE, so we
+    measure y = x @ w_hat against the FP output with x ~ |N(0,1)|."""
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.normal(size=(512, 64)).astype(np.float32))
+    x = jnp.asarray(np.abs(rng.normal(size=(256, 512))).astype(np.float32))
+    y_fp = x @ w
+    err = {}
+    for m in ("bitshift", "rtn", "adaptive"):
+        nt = nest_quantize(w, n=8, h=4, rounding=m)
+        y = x @ nt.part_bit(jnp.float32)
+        err[m] = float(jnp.linalg.norm(y - y_fp) / jnp.linalg.norm(y_fp))
+    assert err["adaptive"] < err["rtn"] < err["bitshift"]
+
+
+def test_critical_nested_bits_rule():
+    from repro.core import critical_nested_bits
+    assert critical_nested_bits(10, 8) == 5     # < 30 MB
+    assert critical_nested_bits(100, 8) == 4    # 30..300 MB
+    assert critical_nested_bits(500, 8) == 3    # >= 300 MB

