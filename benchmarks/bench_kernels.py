@@ -2,7 +2,9 @@
 
 CPU wall-times are NOT TPU times; the derived column carries the structural
 quantities that transfer: HBM bytes per weight read (packed vs bf16) and
-the VMEM working set per BlockSpec tile.
+the VMEM working set per BlockSpec tile.  On a TPU backend the Pallas
+kernels themselves are timed; elsewhere the jnp references run over the
+SAME packed layouts, so the byte accounting is identical.
 """
 from __future__ import annotations
 
@@ -12,10 +14,23 @@ import jax.numpy as jnp
 
 from repro.core import int_range, packing
 from repro.core.decompose import decompose
+from repro.core.nesting import nest_quantize
 from repro.kernels.nest_recompose import ref as nr_ref
+from repro.kernels.nested_matmul import kernel as nm_kernel
+from repro.kernels.nested_matmul import ref as nm_ref
+from repro.kernels.packed_matmul import kernel as pm_kernel
 from repro.kernels.packed_matmul import ref as pm_ref
 
 from .common import emit, time_fn
+
+ON_TPU = jax.default_backend() == "tpu"
+
+
+def _vmem_tile_bytes(bm: int, bn: int, bk: int, *stream_bits) -> int:
+    """Static VMEM working set of one grid step: x tile + packed word
+    tile(s) + f32 accumulator."""
+    words = sum(packing.blocked_rows(bk, k) * bn * 4 for k in stream_bits)
+    return bm * bk * 4 + words + bm * bn * 4
 
 
 def run():
@@ -25,23 +40,77 @@ def run():
     w_dense = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32))
     dense = jax.jit(lambda a, b: a @ b)
     t_dense = time_fn(dense, x, w_dense)
+    bf16_bytes = K * N * 2
     emit("matmul_dense_f32_4096x2048", t_dense,
-         f"weight_bytes={K*N*4}")
+         f"weight_bytes={K*N*4};bf16_weight_bytes={bf16_bytes}")
 
+    # -- part-bit single stream (INT-k) -------------------------------------
     for k in (4, 8):
         lo, hi = int_range(k)
         codes = jnp.asarray(rng.integers(lo, hi + 1, size=(K, N)), jnp.int32)
         words = packing.pack_blocked(codes, k, bk, axis=0)
         scale = jnp.asarray(rng.uniform(0.01, 0.1, size=(1, N)), np.float32)
-        f = jax.jit(lambda xx, ww, ss: pm_ref.packed_matmul_ref(
-            xx, ww, ss, k=k, K=K, block_k=bk))
+        if ON_TPU:
+            f = lambda xx, ww, ss: pm_kernel.packed_matmul(
+                xx, ww, ss, k=k, K=K, block_k=bk)
+        else:
+            f = jax.jit(lambda xx, ww, ss: pm_ref.packed_matmul_ref(
+                xx, ww, ss, k=k, K=K, block_k=bk))
         t = time_fn(f, x, words, scale)
         wb = int(np.prod(words.shape)) * 4
-        emit(f"packed_matmul_ref_k{k}", t,
-             f"weight_bytes={wb};vs_bf16={wb/(K*N*2):.3f};"
-             f"vmem_tile_bytes={(128*bk*4 + packing.packed_rows(bk,k)*128*4 + 128*128*4)}")
+        emit(f"packed_matmul_k{k}", t,
+             f"weight_bytes={wb};vs_bf16={wb/bf16_bytes:.4f};"
+             f"bound={k/16:.4f};"
+             f"vmem_tile_bytes={_vmem_tile_bytes(128, 128, bk, k)}")
+        assert wb / bf16_bytes <= k / 16 + 1e-9
 
-    # recompose (page-in upgrade path)
+    # -- full-bit dual stream (the nested serving path) ---------------------
+    for (n, h) in ((8, 4), (8, 6), (6, 4)):
+        w = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32) * 0.05)
+        nt = nest_quantize(w, n=n, h=h, rounding="rtn", block=bk)
+        scale = nt.scale.reshape(1, -1)
+        if ON_TPU:
+            f = lambda xx, wh, wl, ss: nm_kernel.nested_matmul(
+                xx, wh, wl, ss, n=n, h=h, K=K, block_k=bk)
+        else:
+            f = jax.jit(lambda xx, wh, wl, ss: nm_ref.nested_matmul_ref(
+                xx, wh, wl, ss, n=n, h=h, K=K, block_k=bk))
+        t = time_fn(f, x, nt.w_high, nt.w_low, scale)
+        wb = nt.nbytes_high() + nt.nbytes_low()
+        bound = (n + 1) / 16          # (h + l + 1)/16 of the bf16 read bytes
+        emit(f"nested_matmul_n{n}h{h}", t,
+             f"weight_bytes={wb};vs_bf16={wb/bf16_bytes:.4f};"
+             f"bound={bound:.4f};"
+             f"vmem_tile_bytes={_vmem_tile_bytes(128, 128, bk, h, n - h + 1)}")
+        assert wb / bf16_bytes <= bound + 1e-9, (wb / bf16_bytes, bound)
+
+    # -- block-size sweep: tile choices measured, not guessed ---------------
+    n, h = 8, 4
+    w = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32) * 0.05)
+    for bk_s in (256, 512, 1024):
+        nt = nest_quantize(w, n=n, h=h, rounding="rtn", block=bk_s)
+        scale = nt.scale.reshape(1, -1)
+        if not ON_TPU:
+            # CPU: block_m/n do not change the jnp reference, so time the
+            # block_k layout ONCE and report the per-tile VMEM footprint
+            # each (bm, bn) choice implies.
+            f = jax.jit(lambda xx, wh, wl, ss: nm_ref.nested_matmul_ref(
+                xx, wh, wl, ss, n=n, h=h, K=K, block_k=bk_s))
+            t_ref = time_fn(f, x, nt.w_high, nt.w_low, scale)
+        for bm in (64, 128):
+            for bn in (128, 256):
+                if ON_TPU:
+                    f = lambda xx, wh, wl, ss: nm_kernel.nested_matmul(
+                        xx, wh, wl, ss, n=n, h=h, K=K,
+                        block_m=bm, block_n=bn, block_k=bk_s)
+                    t = time_fn(f, x, nt.w_high, nt.w_low, scale)
+                else:
+                    t = t_ref
+                emit(f"nested_matmul_sweep_bm{bm}_bn{bn}_bk{bk_s}", t,
+                     f"measured_backend={'pallas' if ON_TPU else 'jnp-ref'};"
+                     f"vmem_tile_bytes={_vmem_tile_bytes(bm, bn, bk_s, h, n - h + 1)}")
+
+    # -- recompose (page-in upgrade path) -----------------------------------
     n, h = 8, 4
     w_int = jnp.asarray(rng.integers(-128, 128, size=(K, N)), jnp.int32)
     wh, wl = decompose(w_int, n, h)
@@ -55,7 +124,8 @@ def run():
          f"read_bytes={read};write_bytes={K*N};"
          f"bytes_per_weight={(read + K*N)/(K*N):.3f}")
 
-    # pack/unpack throughput (switch-time cost)
+    # pack/unpack throughput (quantize-time cost; switching needs NO repack)
+    codes = jnp.asarray(rng.integers(-8, 8, size=(K, N)), jnp.int32)
     t = time_fn(jax.jit(lambda c: packing.pack_blocked(c, 4, bk, axis=0)), codes)
     emit("pack_blocked_k4_8M", t, f"elements={K*N}")
 

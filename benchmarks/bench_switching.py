@@ -4,14 +4,25 @@ NestQuant upgrade = page-in bytes(w_low) with ZERO page-out; the
 diverse-bitwidths baseline pages in the full INT-n model and pages out the
 INT-h model.  Reduction = 1 - nest/(div_in + div_out), the paper's
 'Reduced Overhead' column (57-87% across configs).
+
+Also measures the WALL-CLOCK switch latency of the packed execution path
+(an O(#leaves) residency/metadata flip: store.params() re-stamps the mode
+on the packed tree) against the seed's full-tree materialize() (dequantize
+every weight to dense floats).  Caveat, reported alongside: the packed
+path stamps the mode into static pytree metadata, so the FIRST use of
+each mode triggers one jit retrace of prefill/decode (the seed's dense
+trees share one trace across modes); the steady-state end-to-end number
+(flip + warm prefill) is what repeated switching actually costs.
 """
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCHS
-from repro.core import NestQuantStore, nest_quantize_tree
+from repro.core import NestQuantStore, materialize, nest_quantize_tree
 from repro.models import make_model
 
 from .common import emit
@@ -41,6 +52,51 @@ def run():
                  f"reduction={red:.3f};paper_theory={theo:.3f}")
             assert up_out == 0
             assert red > 0.4
+
+    # -- switch latency: O(1) residency flip vs seed full-tree dequant ------
+    cfg = ARCHS["qwen2-1.5b"].reduced()
+    params = make_model(cfg).init(rng)
+    nested = nest_quantize_tree(params, n=8, h=4)
+    store = NestQuantStore(nested, n=8, h=4, mode="part")
+    reps = 20
+    flip_s = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        store.to_full()
+        jax.block_until_ready(store.params())       # packed tree, no dequant
+        store.to_part()
+        jax.block_until_ready(store.params())
+        flip_s.append((time.perf_counter() - t0) / 2)   # avg of up + down
+    mat_s = []
+    for mode in ("full", "part") * (reps // 2):
+        t0 = time.perf_counter()
+        jax.block_until_ready(materialize(nested, mode, jnp.bfloat16))
+        mat_s.append(time.perf_counter() - t0)
+    flip_us = min(flip_s) * 1e6
+    mat_us = min(mat_s) * 1e6
+    emit("switch_latency_residency_flip", flip_us,
+         "packed-path store.params(); excludes one-time per-mode jit retrace")
+    emit("switch_latency_full_materialize", mat_us, "seed-path materialize()")
+    emit("switch_latency_speedup", 0.0,
+         f"materialize_over_flip={mat_us / max(flip_us, 1e-9):.1f}x")
+
+    # steady-state end-to-end: flip + warm prefill, both mode traces cached
+    import numpy as np
+    from repro.serving import Request, ServeEngine
+    eng = ServeEngine(cfg, store, max_batch=2, max_len=32)
+    b = store.bytes()
+    part_budget = b["high"] + b["scales"] + b["fp"]
+    mk = lambda s: [Request(i, np.full(4, 7, np.int32), 1) for i in range(2)]
+    eng.generate(mk(0), memory_budget_bytes=None)           # warm full trace
+    eng.generate(mk(1), memory_budget_bytes=part_budget)    # warm part trace
+    e2e = []
+    for i in range(6):
+        budget = None if i % 2 == 0 else part_budget
+        t0 = time.perf_counter()
+        eng.generate(mk(i), memory_budget_bytes=budget)     # switch + serve
+        e2e.append(time.perf_counter() - t0)
+    emit("switch_latency_e2e_warm", min(e2e) * 1e6,
+         "mode flip + 1-token generate, jit caches warm (steady state)")
 
 
 if __name__ == "__main__":

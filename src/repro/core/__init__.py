@@ -4,8 +4,9 @@ from .quantizer import (compute_scale, quantize_rtn, dequantize, perturbation,
 from .squant import adaptive_round, case_metric
 from .decompose import (split_high, split_low, recompose, decompose,
                         recompose_error, numerical_error_table, ROUNDINGS)
-from .packing import pack, unpack, per_word, packed_rows, packed_nbytes
+from .packing import (pack, unpack, pack_blocked, unpack_blocked, per_word,
+                      packed_rows, packed_nbytes, blocked_rows, choose_block)
 from .nesting import (NestedTensor, nest_quantize, nest_quantize_tree,
-                      materialize, tree_bytes, critical_nested_bits,
-                      default_predicate)
+                      materialize, set_tree_mode, tree_bytes,
+                      critical_nested_bits, default_predicate)
 from .switching import NestQuantStore, SwitchLedger, diverse_bitwidth_bytes

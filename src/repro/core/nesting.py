@@ -39,25 +39,42 @@ class NestedTensor:
     The logical weight has shape ``shape`` = (..., K, N); quantization is
     per-output-channel (axis N), the SQuant flip group is the reduction
     axis K.  ``w_high`` holds packed h-bit codes, ``w_low`` packed
-    (l+1)-bit codes (paper's compensation), both packed along K slot-major
-    (see core/packing.py).
+    (l+1)-bit codes (paper's compensation), both BLOCK-packed along K
+    (core.packing.pack_blocked with ``block`` elements per block) - the
+    layout the Pallas packed/nested matmul kernels stream directly, so
+    serving never materializes a dense weight.
+
+    ``mode`` ('full' | 'part') is static metadata stamped by the switching
+    store: it selects which packed stream(s) the model-side matmul
+    dispatch reads.  The arrays themselves are identical in both modes -
+    a mode switch is a pure residency/metadata flip.
     """
-    w_high: jax.Array          # packed int32, (..., ceil(K/pw_h), N)
-    w_low: jax.Array           # packed int32, (..., ceil(K/pw_l), N)
+    w_high: jax.Array          # packed int32, (..., K/block*blocked_rows(block,h), N)
+    w_low: jax.Array           # packed int32, (..., K/block*blocked_rows(block,l+1), N)
     scale: jax.Array           # f32, (..., 1, N)
     shape: Tuple[int, ...]     # logical shape
     n: int
     h: int
+    block: int = packing.DEFAULT_BLOCK   # pack block along K (= kernel block_k)
+    mode: str = "full"                   # which streams serving reads
 
     # -- pytree plumbing ----------------------------------------------------
     def tree_flatten(self):
-        return (self.w_high, self.w_low, self.scale), (self.shape, self.n, self.h)
+        return ((self.w_high, self.w_low, self.scale),
+                (self.shape, self.n, self.h, self.block, self.mode))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         w_high, w_low, scale = children
-        shape, n, h = aux
-        return cls(w_high, w_low, scale, shape, n, h)
+        shape, n, h, block, mode = aux
+        return cls(w_high, w_low, scale, shape, n, h, block, mode)
+
+    def with_mode(self, mode: str) -> "NestedTensor":
+        assert mode in ("full", "part"), mode
+        if mode == self.mode:
+            return self
+        return NestedTensor(self.w_high, self.w_low, self.scale, self.shape,
+                            self.n, self.h, self.block, mode)
 
     # -- derived ------------------------------------------------------------
     @property
@@ -67,6 +84,12 @@ class NestedTensor:
     @property
     def K(self) -> int:
         return self.shape[-2]
+
+    @property
+    def part_scale(self) -> jax.Array:
+        """Inflated part-bit scale s * 2^l (Eq. 10) - the one definition
+        shared by the dense, gather, and kernel part-bit paths."""
+        return self.scale * (2.0 ** self.l)
 
     def nbytes_high(self) -> int:
         return int(np.prod(self.w_high.shape)) * 4
@@ -79,10 +102,12 @@ class NestedTensor:
 
     # -- materialization ----------------------------------------------------
     def codes_high(self) -> jax.Array:
-        return packing.unpack(self.w_high, self.h, self.K, axis=self.w_high.ndim - 2)
+        return packing.unpack_blocked(self.w_high, self.h, self.K, self.block,
+                                      axis=self.w_high.ndim - 2)
 
     def codes_low(self) -> jax.Array:
-        return packing.unpack(self.w_low, self.l + 1, self.K, axis=self.w_low.ndim - 2)
+        return packing.unpack_blocked(self.w_low, self.l + 1, self.K, self.block,
+                                      axis=self.w_low.ndim - 2)
 
     def codes_full(self) -> jax.Array:
         return recompose(self.codes_high(), self.codes_low(), self.n, self.h)
@@ -92,12 +117,34 @@ class NestedTensor:
 
         (No reshape: unpack restores the logical trailing dims, and leading
         stacked dims may have been sliced away by a layer scan.)"""
-        s_high = self.scale * (2.0 ** self.l)
-        return dequantize(self.codes_high(), s_high, dtype)
+        return dequantize(self.codes_high(), self.part_scale, dtype)
 
     def full_bit(self, dtype=jnp.bfloat16) -> jax.Array:
         """Dequantized full-bit weight after page-in + recompose."""
         return dequantize(self.codes_full(), self.scale, dtype)
+
+    def dequant(self, dtype=jnp.bfloat16) -> jax.Array:
+        """Dequantize according to the stamped serving ``mode``."""
+        return self.full_bit(dtype) if self.mode == "full" else self.part_bit(dtype)
+
+    def gather_rows(self, idx: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+        """Dequantized logical rows ``idx`` along the packed K axis, read
+        straight from the packed words (the embedding-gather path: only the
+        word rows covering the requested tokens are touched, never the
+        whole table).  Returns (*idx.shape, N) in ``dtype``, honouring
+        ``mode``."""
+        assert self.w_high.ndim == 2, "row gather expects a 2-D weight"
+        flat = idx.reshape(-1)
+        codes = packing.gather_block_rows(self.w_high, self.h, self.block, flat)
+        if self.mode == "full":
+            low = packing.gather_block_rows(self.w_low, self.l + 1,
+                                            self.block, flat)
+            codes = recompose(codes, low, self.n, self.h)
+            scale = self.scale
+        else:
+            scale = self.part_scale
+        out = dequantize(codes, scale, dtype)        # scale (1, N) broadcasts
+        return out.reshape(tuple(idx.shape) + (self.shape[-1],))
 
 
 # ---------------------------------------------------------------------------
@@ -116,7 +163,8 @@ def critical_nested_bits(model_size_mb: float, n: int = 8) -> int:
 # ---------------------------------------------------------------------------
 def nest_quantize(w: jax.Array, n: int = 8, h: Optional[int] = None,
                   rounding: str = "adaptive",
-                  group_size: Optional[int] = None) -> NestedTensor:
+                  group_size: Optional[int] = None,
+                  block: Optional[int] = None) -> NestedTensor:
     assert w.ndim >= 2, "nest_quantize expects a matmul weight (..., K, N)"
     if h is None:
         h = critical_nested_bits(w.size * 4 / 1e6, n)
@@ -149,15 +197,19 @@ def nest_quantize(w: jax.Array, n: int = 8, h: Optional[int] = None,
         w_high = split_high(w_int, n, h, method=rounding)
     w_low = split_low(w_int, w_high, n, h, compensate=True)
 
-    # step 3: pack h-bit and (l+1)-bit weights.
+    # step 3: block-pack h-bit and (l+1)-bit weights along K - the layout
+    # the Pallas packed/nested matmul kernels consume directly.
     ax = w.ndim - 2
+    if block is None:
+        block = packing.choose_block(w.shape[-2])
     return NestedTensor(
-        w_high=packing.pack(w_high, h, axis=ax),
-        w_low=packing.pack(w_low, l + 1, axis=ax),
+        w_high=packing.pack_blocked(w_high, h, block, axis=ax),
+        w_low=packing.pack_blocked(w_low, l + 1, block, axis=ax),
         scale=scale,
         shape=tuple(w.shape),
         n=n,
         h=h,
+        block=block,
     )
 
 
@@ -179,15 +231,11 @@ def default_predicate(path: str, leaf: Any, min_dim: int = 64) -> bool:
     return True
 
 
-def _paths(tree) -> Dict[str, Any]:
-    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
-    return {jax.tree_util.keystr(p): v for p, v in flat}, treedef
-
-
 def nest_quantize_tree(params, n: int = 8, h: Optional[int] = None,
                        rounding: str = "adaptive",
                        predicate: Callable[[str, Any], bool] = default_predicate,
-                       group_size: Optional[int] = None):
+                       group_size: Optional[int] = None,
+                       block: Optional[int] = None):
     """Apply Algorithm 1 across a parameter pytree.
 
     Returns a pytree of the same structure where nested leaves are
@@ -207,7 +255,7 @@ def nest_quantize_tree(params, n: int = 8, h: Optional[int] = None,
         key = jax.tree_util.keystr(path)
         if predicate(key, leaf):
             out.append(nest_quantize(leaf, n=n, h=h, rounding=rounding,
-                                     group_size=group_size))
+                                     group_size=group_size, block=block))
         else:
             out.append(leaf)
     return jax.tree_util.tree_unflatten(treedef, out)
@@ -221,6 +269,16 @@ def materialize(nested_params, mode: str = "full", dtype=jnp.bfloat16):
         return x
     return jax.tree_util.tree_map(
         leaf_fn, nested_params, is_leaf=lambda x: isinstance(x, NestedTensor))
+
+
+def set_tree_mode(nested_params, mode: str):
+    """Stamp the serving ``mode`` on every NestedTensor leaf.
+
+    O(#leaves) metadata flip - no array touches, no dequantization.  The
+    model-side matmul dispatch reads the stamp to pick the packed stream(s)."""
+    return jax.tree_util.tree_map(
+        lambda x: x.with_mode(mode) if isinstance(x, NestedTensor) else x,
+        nested_params, is_leaf=lambda x: isinstance(x, NestedTensor))
 
 
 def tree_bytes(nested_params) -> Dict[str, int]:

@@ -8,15 +8,27 @@ Unpacking slot j then yields the contiguous element block [j*R, (j+1)*R),
 so the unpack is shift+mask (VPU) followed by a concat - no element
 interleave, no lane-crossing shuffles.
 
-Capacity is identical to the paper's layout (per_word = word_bits // k);
-only the address map differs, which is irrelevant to the storage /
-switching accounting and friendly to vectorized unpack in the Pallas
-matmul kernel (kernels/packed_matmul).
+Two layouts live here:
+
+* :func:`pack` / :func:`unpack` - flat slot-major over the whole axis.
+  Capacity is ceil(K / (32 // k)) words: exact for k in {1, 2, 4, 8},
+  with up to (32 % k) wasted bits per word otherwise.
+
+* :func:`pack_blocked` / :func:`unpack_blocked` - the SERVING layout the
+  Pallas kernels' BlockSpec contract consumes: K is tiled into blocks of
+  ``block`` elements, and within each block the k-bit field is split into
+  power-of-two-width components (5 = 4+1, 6 = 4+2, 7 = 4+2+1), each
+  packed slot-major.  Power-of-two widths divide the 32-bit word exactly,
+  so a block that is a multiple of 32 stores EXACTLY k bits per element -
+  the property that lets the dual-stream nested matmul read
+  (h + l + 1)/16 of the bf16 weight bytes with no rounding loss.  A
+  K-tile of a matmul maps to a contiguous row range of words
+  (:func:`blocked_rows` per block), and the in-kernel unpack
+  (:func:`unpack_block_words`) is static shift+mask + concat on the VPU.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
 from typing import Tuple
 
 import jax
@@ -24,9 +36,12 @@ import jax.numpy as jnp
 
 WORD_BITS = 32
 
+# Largest block size pack_blocked defaults to; kernels tile K by it.
+DEFAULT_BLOCK = 512
+
 
 def per_word(k: int) -> int:
-    assert 2 <= k <= 8, k
+    assert 1 <= k <= WORD_BITS, k
     return WORD_BITS // k
 
 
@@ -35,19 +50,166 @@ def packed_rows(K: int, k: int) -> int:
 
 
 def packed_nbytes(shape: Tuple[int, ...], k: int, axis: int = 0) -> int:
-    """Bytes of the packed representation of an int tensor of ``shape``."""
+    """Bytes of the flat packed representation of an int tensor of ``shape``."""
     rest = math.prod(shape) // shape[axis]
     return packed_rows(shape[axis], k) * rest * 4
 
 
-def pack_blocked(x: jax.Array, k: int, block: int, axis: int = 0) -> jax.Array:
-    """Pack slot-major WITHIN blocks of ``block`` elements along ``axis``.
+def bit_components(k: int) -> Tuple[int, ...]:
+    """Power-of-two width split of a k-bit field, widest first (5 -> (4, 1)).
 
-    Same capacity as :func:`pack`; the per-block address map is what the
-    Pallas packed_matmul kernel consumes (a K-tile of the matmul maps to a
-    contiguous row range of words).  block must be a multiple of per_word
-    and divide the padded K.
-    """
+    Each component width divides WORD_BITS exactly, so the blocked layout
+    stores exactly k bits per element (block permitting)."""
+    assert k >= 1, k
+    return tuple(1 << i for i in reversed(range(k.bit_length())) if (k >> i) & 1)
+
+
+def blocked_rows(block: int, k: int) -> int:
+    """int32 word rows one block of ``block`` k-bit elements occupies."""
+    return sum(math.ceil(block / per_word(w)) for w in bit_components(k))
+
+
+def choose_block(K: int, preferred: int = DEFAULT_BLOCK) -> int:
+    """Largest power-of-two block <= preferred that divides K (else K).
+
+    Guarantees the padded K equals the logical K, so the kernels' K-grid
+    needs no activation padding; multiples of 32 keep the 1-bit component
+    planes exact."""
+    b = preferred
+    while b >= 32:
+        if K % b == 0:
+            return b
+        b //= 2
+    return K
+
+
+# ---------------------------------------------------------------------------
+# shared shift/mask word codecs (host jnp AND Pallas kernel bodies)
+# ---------------------------------------------------------------------------
+def _as_uint32(words: jax.Array) -> jax.Array:
+    # astype on int32 is modular (two's complement reinterpretation), valid
+    # both under XLA and in Pallas kernel bodies where bitcast is awkward.
+    return words if words.dtype == jnp.uint32 else words.astype(jnp.uint32)
+
+
+def _pack_words(fields: jax.Array, k: int) -> jax.Array:
+    """(pw*R, ...) uint32 fields (< 2^k) -> (R, ...) int32 words, slot-major
+    along axis 0.  Pads the leading axis up to pw*R with zeros."""
+    pw = per_word(k)
+    K = fields.shape[0]
+    R = packed_rows(K, k)
+    pad = R * pw - K
+    if pad:
+        fields = jnp.concatenate(
+            [fields, jnp.zeros((pad,) + fields.shape[1:], fields.dtype)], axis=0)
+    slots = fields.reshape((pw, R) + fields.shape[1:])
+    word = jnp.zeros((R,) + fields.shape[1:], jnp.uint32)
+    for j in range(pw):
+        word = word | (slots[j] << jnp.uint32(j * k))
+    return word.astype(jnp.int32)
+
+
+def unpack_words(words: jax.Array, k: int, count: int,
+                 signed: bool = True) -> jax.Array:
+    """Slot-major shift/mask unpack along axis 0 - the ONE unpack helper
+    shared by the host codecs and every Pallas kernel body (VPU-only ops:
+    static shifts, masks, compares, concat).
+
+    words: (R, ...) int32/uint32 -> (count, ...) int32 codes,
+    sign-extended when ``signed``; count <= R * per_word(k)."""
+    pw = per_word(k)
+    w = _as_uint32(words)
+    mask = jnp.uint32(2 ** k - 1)
+    sign = 2 ** (k - 1)
+    parts = []
+    for j in range(pw):
+        v = ((w >> jnp.uint32(j * k)) & mask).astype(jnp.int32)
+        if signed:
+            v = jnp.where(v >= sign, v - 2 ** k, v)
+        parts.append(v)
+    return jnp.concatenate(parts, axis=0)[:count]
+
+
+def pack_block_words(x: jax.Array, k: int) -> jax.Array:
+    """One block: (block, ...) signed k-bit codes -> (blocked_rows, ...)
+    int32 words, component-major (widest field first) along axis 0."""
+    u = _as_uint32(x.astype(jnp.int32)) & jnp.uint32(2 ** k - 1)
+    comps, shift = [], 0
+    for w in bit_components(k):
+        comps.append(_pack_words((u >> jnp.uint32(shift)) & jnp.uint32(2 ** w - 1), w))
+        shift += w
+    return jnp.concatenate(comps, axis=0)
+
+
+def unpack_block_words(words: jax.Array, k: int, block: int) -> jax.Array:
+    """Inverse of :func:`pack_block_words`: (blocked_rows, ...) int32 words
+    of ONE block -> (block, ...) int32 sign-extended codes.
+
+    This is the kernel-side tile unpack: ``words`` may be a loaded VMEM
+    tile (rows, block_n); all slicing/shifting is static."""
+    off, shift, u = 0, 0, None
+    for w in bit_components(k):
+        rows = packed_rows(block, w)
+        comp = unpack_words(words[off:off + rows], w, block, signed=False)
+        u = comp << shift if u is None else u | (comp << shift)
+        off += rows
+        shift += w
+    sign = 2 ** (k - 1)
+    return jnp.where(u >= sign, u - 2 ** k, u)
+
+
+def gather_block_rows(words: jax.Array, k: int, block: int,
+                      idx: jax.Array) -> jax.Array:
+    """Gather logical elements ``idx`` along the blocked-packed axis 0
+    WITHOUT unpacking the full tensor (the packed embedding gather).
+
+    words: (nb * blocked_rows, ...) int32 block-packed; idx: (T,) int.
+    Element (b, p) of block b lives, per component stream, in word row
+    b*rows_pb + off_c + (p mod R_c) at bit offset (p div R_c) * w_c, so
+    the gather reads exactly one word row per component per element.
+    Returns (T, ...) int32 sign-extended codes."""
+    rows_pb = blocked_rows(block, k)
+    base = (idx // block) * rows_pb
+    p = idx % block
+    off, shift, u = 0, 0, None
+    for w in bit_components(k):
+        R = packed_rows(block, w)
+        rows = _as_uint32(jnp.take(words, base + off + (p % R), axis=0))
+        sh = ((p // R) * w).astype(jnp.uint32)
+        sh = sh.reshape(sh.shape + (1,) * (rows.ndim - 1))
+        field = ((rows >> sh) & jnp.uint32(2 ** w - 1)).astype(jnp.int32)
+        u = field << shift if u is None else u | (field << shift)
+        off += R
+        shift += w
+    sign = 2 ** (k - 1)
+    return jnp.where(u >= sign, u - 2 ** k, u)
+
+
+# ---------------------------------------------------------------------------
+# flat slot-major layout
+# ---------------------------------------------------------------------------
+def pack(x: jax.Array, k: int, axis: int = 0) -> jax.Array:
+    """Pack signed k-bit codes into int32 words along ``axis`` (slot-major)."""
+    x = jnp.moveaxis(x, axis, 0)
+    u = _as_uint32(x.astype(jnp.int32)) & jnp.uint32(2 ** k - 1)
+    return jnp.moveaxis(_pack_words(u, k), 0, axis)
+
+
+def unpack(words: jax.Array, k: int, K: int, axis: int = 0,
+           dtype=jnp.int32) -> jax.Array:
+    """Inverse of :func:`pack`; returns sign-extended codes."""
+    w = jnp.moveaxis(words, axis, 0)
+    x = unpack_words(w, k, K)
+    return jnp.moveaxis(x, 0, axis).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# blocked exact-bit layout (the kernels' storage contract)
+# ---------------------------------------------------------------------------
+def pack_blocked(x: jax.Array, k: int, block: int, axis: int = 0) -> jax.Array:
+    """Pack component-split slot-major WITHIN blocks of ``block`` elements
+    along ``axis`` (see module docstring).  K pads up to a block multiple;
+    a K-tile of the matmul maps to a contiguous row range of words."""
     x = jnp.moveaxis(x, axis, 0)
     K = x.shape[0]
     pad = (-K) % block
@@ -55,52 +217,20 @@ def pack_blocked(x: jax.Array, k: int, block: int, axis: int = 0) -> jax.Array:
         x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
     nb = x.shape[0] // block
     xb = x.reshape((nb, block) + x.shape[1:])
-    words = pack(xb, k, axis=1)                  # (nb, packed_rows(block), ...)
-    words = words.reshape((nb * packed_rows(block, k),) + x.shape[1:])
+    xb = jnp.moveaxis(xb, 1, 0)                       # (block, nb, ...)
+    words = pack_block_words(xb, k)                   # (rows_pb, nb, ...)
+    words = jnp.moveaxis(words, 1, 0)                 # (nb, rows_pb, ...)
+    words = words.reshape((nb * blocked_rows(block, k),) + x.shape[1:])
     return jnp.moveaxis(words, 0, axis)
 
 
 def unpack_blocked(words: jax.Array, k: int, K: int, block: int,
                    axis: int = 0, dtype=jnp.int32) -> jax.Array:
     w = jnp.moveaxis(words, axis, 0)
-    rows_per_block = packed_rows(block, k)
-    nb = w.shape[0] // rows_per_block
-    wb = w.reshape((nb, rows_per_block) + w.shape[1:])
-    x = unpack(wb, k, block, axis=1, dtype=dtype)
-    x = x.reshape((nb * block,) + w.shape[1:])[:K]
-    return jnp.moveaxis(x, 0, axis)
-
-
-def pack(x: jax.Array, k: int, axis: int = 0) -> jax.Array:
-    """Pack signed k-bit codes into int32 words along ``axis`` (slot-major)."""
-    pw = per_word(k)
-    x = jnp.moveaxis(x, axis, 0)
-    K = x.shape[0]
-    R = packed_rows(K, k)
-    pad = R * pw - K
-    if pad:
-        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
-    mask = jnp.uint32(2 ** k - 1)
-    # element index = j * R + r  ->  slot j of word r
-    slots = x.astype(jnp.int32).astype(jnp.uint32).reshape((pw, R) + x.shape[1:])
-    word = jnp.zeros((R,) + x.shape[1:], jnp.uint32)
-    for j in range(pw):
-        word = word | ((slots[j] & mask) << jnp.uint32(j * k))
-    word = jnp.moveaxis(word, 0, axis)
-    return jax.lax.bitcast_convert_type(word, jnp.int32)
-
-
-def unpack(words: jax.Array, k: int, K: int, axis: int = 0,
-           dtype=jnp.int32) -> jax.Array:
-    """Inverse of :func:`pack`; returns sign-extended codes."""
-    pw = per_word(k)
-    w = jax.lax.bitcast_convert_type(words, jnp.uint32)
-    w = jnp.moveaxis(w, axis, 0)
-    mask = jnp.uint32(2 ** k - 1)
-    sign = 2 ** (k - 1)
-    parts = []
-    for j in range(pw):
-        v = ((w >> jnp.uint32(j * k)) & mask).astype(jnp.int32)
-        parts.append(jnp.where(v >= sign, v - 2 ** k, v))
-    x = jnp.concatenate(parts, axis=0)[:K]
+    rows_pb = blocked_rows(block, k)
+    nb = w.shape[0] // rows_pb
+    wb = w.reshape((nb, rows_pb) + w.shape[1:])
+    wb = jnp.moveaxis(wb, 1, 0)                       # (rows_pb, nb, ...)
+    x = unpack_block_words(wb, k, block)              # (block, nb, ...)
+    x = jnp.moveaxis(x, 1, 0).reshape((nb * block,) + w.shape[1:])[:K]
     return jnp.moveaxis(x, 0, axis).astype(dtype)

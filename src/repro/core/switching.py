@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from . import packing
-from .nesting import NestedTensor, materialize, tree_bytes
+from .nesting import NestedTensor, materialize, set_tree_mode, tree_bytes
 
 
 @dataclass
@@ -88,6 +88,18 @@ class NestQuantStore:
 
     # -- weights for inference -------------------------------------------
     def params(self):
+        """Serving parameters: the PACKED tree, mode-stamped.
+
+        No dequantization happens here - NestedTensor leaves flow into the
+        model as-is and the matmul dispatch (models.layers.packed_linear)
+        streams the packed words directly.  A mode switch is therefore an
+        O(#leaves) metadata flip (plus the ledgered w_low page-in on
+        upgrade), never a whole-tree dequant."""
+        return set_tree_mode(self.nested_params, self.mode)
+
+    def dense_params(self):
+        """Seed-style dense materialization (benchmark baseline / offline
+        export only - NOT on the serving path)."""
         return materialize(self.nested_params, mode=self.mode, dtype=self.dtype)
 
     # -- comparison baseline ----------------------------------------------

@@ -153,7 +153,8 @@ def _nested_pspecs(nested_abs, dense_pspecs):
             out_ax = spec[-1] if len(spec) else None
             packed = P(*([None] * (nd - 1)), out_ax)
             return NestedTensor(w_high=packed, w_low=packed, scale=packed,
-                                shape=leaf.shape, n=leaf.n, h=leaf.h)
+                                shape=leaf.shape, n=leaf.n, h=leaf.h,
+                                block=leaf.block, mode=leaf.mode)
         return spec
 
     return jax.tree.map(f, nested_abs, dense_pspecs,

@@ -1,1 +1,1 @@
-from . import packed_matmul, nest_recompose, flash_attention
+from . import packed_matmul, nest_recompose, nested_matmul, flash_attention

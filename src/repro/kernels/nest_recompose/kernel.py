@@ -13,28 +13,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ...core.packing import packed_rows, per_word
-
-
-def _unpack_tile(words, k: int, bk: int):
-    pw = per_word(k)
-    w = words.astype(jnp.uint32)
-    mask = jnp.uint32(2 ** k - 1)
-    sign = 2 ** (k - 1)
-    parts = []
-    for j in range(pw):
-        v = ((w >> jnp.uint32(j * k)) & mask).astype(jnp.int32)
-        parts.append(jnp.where(v >= sign, v - 2 ** k, v))
-    return jnp.concatenate(parts, axis=0)[:bk]
+from ...core.decompose import recompose
+from ...core.packing import blocked_rows, unpack_block_words
 
 
 def _kernel(wh_ref, wl_ref, o_ref, *, n, h, bk):
-    l = n - h
-    wh = _unpack_tile(wh_ref[...], h, bk)
-    wl = _unpack_tile(wl_ref[...], n - h + 1, bk)
-    w = wh * (2 ** l) + wl
-    lo, hi = -(2 ** (n - 1)), 2 ** (n - 1) - 1
-    o_ref[...] = jnp.clip(w, lo, hi).astype(jnp.int8)
+    wh = unpack_block_words(wh_ref[...], h, bk)
+    wl = unpack_block_words(wl_ref[...], n - h + 1, bk)
+    o_ref[...] = recompose(wh, wl, n, h).astype(jnp.int8)
 
 
 @functools.partial(jax.jit, static_argnames=("n", "h", "K", "block_k",
@@ -43,8 +29,8 @@ def nest_recompose(words_high, words_low, *, n: int, h: int, K: int,
                    block_k: int = 512, block_n: int = 256,
                    interpret: bool = False):
     N = words_high.shape[1]
-    rows_h = packed_rows(block_k, h)
-    rows_l = packed_rows(block_k, n - h + 1)
+    rows_h = blocked_rows(block_k, h)
+    rows_l = blocked_rows(block_k, n - h + 1)
     grid = (K // block_k, N // block_n)
     return pl.pallas_call(
         functools.partial(_kernel, n=n, h=h, bk=block_k),

@@ -1,0 +1,2 @@
+from .ops import nested_matmul
+from . import kernel, ops, ref

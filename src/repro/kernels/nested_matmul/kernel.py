@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: fused dual-stream nested dequant-matmul.
+
+The full-bit serving path of NestQuant: stream the packed h-bit ``w_high``
+tile AND the packed (l+1)-bit ``w_low`` tile HBM->VMEM, recompose the
+INT-n codes in VMEM (Eq. 6: clip(w_high * 2^l + w_low)), dequantize by the
+per-output-channel scale, and feed the MXU - full-bit matmuls run directly
+from the nested storage with (h + l + 1)/16 of the bf16 weight-read bytes
+and NO dense intermediate in HBM.  Part-bit mode uses kernels/packed_matmul
+on the ``w_high`` stream alone.
+
+Layout contract: both streams are block-packed along K
+(core.packing.pack_blocked with block = block_k); grid step (i, j, kk)
+sees contiguous word tiles of blocked_rows(block_k, h) and
+blocked_rows(block_k, l+1) rows, unpacked with the shared
+core.packing.unpack_block_words (static shift+mask + concat, VPU-only).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ...core.decompose import recompose
+from ...core.packing import blocked_rows, unpack_block_words
+
+
+def _kernel(x_ref, wh_ref, wl_ref, s_ref, o_ref, acc_ref, *, n, h, nk, bk):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    wh = unpack_block_words(wh_ref[...], h, bk)             # (bk, bn) int32
+    wl = unpack_block_words(wl_ref[...], n - h + 1, bk)
+    codes = recompose(wh, wl, n, h)                         # Eq. 6 in VMEM
+    w = codes.astype(x_ref.dtype)                           # exact for n<=8
+    acc_ref[...] += jnp.dot(x_ref[...], w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(kk == nk - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] * s_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "h", "K", "block_m",
+                                             "block_n", "block_k", "interpret",
+                                             "out_dtype"))
+def nested_matmul(x, words_high, words_low, scale, *, n: int, h: int, K: int,
+                  block_m: int = 128, block_n: int = 128, block_k: int = 512,
+                  interpret: bool = False, out_dtype=None):
+    """x: (M, K); words_high/words_low: block-packed int32 (rows, N);
+    scale: (1, N) f32.  Returns (M, N) in out_dtype (default x.dtype) -
+    the f32 accumulator is cast once on output, so out_dtype=float32
+    keeps full precision for e.g. the LM head."""
+    M = x.shape[0]
+    N = words_high.shape[1]
+    assert K % block_k == 0, (K, block_k)
+    rows_h = blocked_rows(block_k, h)
+    rows_l = blocked_rows(block_k, n - h + 1)
+    nk = K // block_k
+    grid = (M // block_m, N // block_n, nk)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n=n, h=h, nk=nk, bk=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((rows_h, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((rows_l, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype or x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, words_high, words_low, scale)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the dual-stream nested dequant-matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core import packing
+from ...core.decompose import recompose
+
+
+def nested_matmul_ref(x, words_high, words_low, scale, *, n: int, h: int,
+                      K: int, block_k: int, out_dtype=None):
+    """y = x @ (recompose(unpack(w_high), unpack(w_low)) * scale).
+
+    x: (M, K) float; words_high/words_low: block-packed int32 (see
+    core.packing.pack_blocked); scale: (1, N) f32 per-output-channel.
+    """
+    wh = packing.unpack_blocked(words_high, h, K, block_k, axis=0)
+    wl = packing.unpack_blocked(words_low, n - h + 1, K, block_k, axis=0)
+    w = recompose(wh, wl, n, h).astype(jnp.float32) * scale
+    return jnp.matmul(x.astype(jnp.float32), w).astype(out_dtype or x.dtype)

@@ -9,10 +9,9 @@ weight-read term).
 
 Layout contract: words are block-packed along K (core.packing.pack_blocked
 with block = block_k), so grid step (i, j, kk) sees a contiguous word tile
-of shape (block_k / per_word, block_n) - slot j of the tile unpacks to the
-contiguous row range [j*R, (j+1)*R) of the logical (block_k, block_n) tile
-(R = block_k / per_word); the unpack is shift+mask + concat, with no
-element interleave.
+of shape (blocked_rows(block_k, k), block_n) that unpacks to the logical
+(block_k, block_n) tile via core.packing.unpack_block_words - static
+shift+mask + concat, with no element interleave.
 """
 from __future__ import annotations
 
@@ -23,29 +22,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ...core.packing import per_word
+from ...core.packing import blocked_rows, unpack_block_words
 
 
-def _unpack_tile(words, k: int, pw: int, bk: int):
-    """(R, bn) int32 words -> (bk, bn) int32 sign-extended codes."""
-    w = words.astype(jnp.uint32)
-    mask = jnp.uint32(2 ** k - 1)
-    sign = 2 ** (k - 1)
-    parts = []
-    for j in range(pw):
-        v = ((w >> jnp.uint32(j * k)) & mask).astype(jnp.int32)
-        parts.append(jnp.where(v >= sign, v - 2 ** k, v))
-    return jnp.concatenate(parts, axis=0)[:bk]
-
-
-def _kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, k, pw, nk, bk):
+def _kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, k, nk, bk):
     kk = pl.program_id(2)
 
     @pl.when(kk == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    codes = _unpack_tile(w_ref[...], k, pw, bk)             # (bk, bn) int32
+    codes = unpack_block_words(w_ref[...], k, bk)           # (bk, bn) int32
     w = codes.astype(x_ref.dtype)                           # exact for k<=8
     acc_ref[...] += jnp.dot(x_ref[...], w,
                             preferred_element_type=jnp.float32)
@@ -56,22 +43,22 @@ def _kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, k, pw, nk, bk):
 
 
 @functools.partial(jax.jit, static_argnames=("k", "K", "block_m", "block_n",
-                                             "block_k", "interpret"))
+                                             "block_k", "interpret",
+                                             "out_dtype"))
 def packed_matmul(x, words, scale, *, k: int, K: int,
                   block_m: int = 128, block_n: int = 128, block_k: int = 512,
-                  interpret: bool = False):
-    """x: (M, K), words: (K/pw, N) int32 block-packed, scale: (1, N) f32."""
+                  interpret: bool = False, out_dtype=None):
+    """x: (M, K), words: (K/block_k*rows_pb, N) int32 block-packed,
+    scale: (1, N) f32.  Output in out_dtype (default x.dtype)."""
     M = x.shape[0]
     N = words.shape[1]
-    pw = per_word(k)
     assert K % block_k == 0, (K, block_k)
-    from ...core.packing import packed_rows
-    rows_per_block = packed_rows(block_k, k)
+    rows_per_block = blocked_rows(block_k, k)
     nk = K // block_k
     grid = (M // block_m, N // block_n, nk)
 
     return pl.pallas_call(
-        functools.partial(_kernel, k=k, pw=pw, nk=nk, bk=block_k),
+        functools.partial(_kernel, k=k, nk=nk, bk=block_k),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
@@ -79,7 +66,7 @@ def packed_matmul(x, words, scale, *, k: int, K: int,
             pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype or x.dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         interpret=interpret,
     )(x, words, scale)

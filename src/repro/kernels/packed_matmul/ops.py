@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from ...core import packing
 from ...core.nesting import NestedTensor
+from ..dispatch import plan
 from . import kernel, ref
 
 DEFAULT_BLOCK_K = 512
@@ -17,15 +18,18 @@ def prepare(nt: NestedTensor, mode: str = "full",
             block_k: int = DEFAULT_BLOCK_K) -> Tuple[jax.Array, jax.Array, int, int]:
     """NestedTensor -> (block-packed words, scale, k, K) for the kernel.
 
-    mode 'full': recomposed INT-n codes; 'part': INT-h codes with the
-    inflated nesting scale s*2^l (paper Eq. 10).
+    mode 'full': recomposed INT-n codes re-packed as ONE k=n stream
+    (single-stream fallback; the dual-stream kernels/nested_matmul reads
+    the stored streams directly); 'part': INT-h codes with the inflated
+    nesting scale s*2^l (paper Eq. 10).  Repacks to ``block_k`` blocks,
+    padding K up to a block multiple.
     """
     assert len(nt.shape) == 2, "kernel path expects a 2-D weight"
     K = nt.shape[-2]
     if mode == "full":
         codes, k, scale = nt.codes_full(), nt.n, nt.scale
     else:
-        codes, k, scale = nt.codes_high(), nt.h, nt.scale * (2.0 ** nt.l)
+        codes, k, scale = nt.codes_high(), nt.h, nt.part_scale
     pad = (-K) % block_k
     if pad:
         codes = jnp.concatenate(
@@ -36,19 +40,17 @@ def prepare(nt: NestedTensor, mode: str = "full",
 
 def packed_matmul(x, words, scale, *, k: int, K: int,
                   block_k: int = DEFAULT_BLOCK_K, use_pallas: bool = None,
-                  interpret: bool = False):
+                  interpret: bool = False, out_dtype=None):
     """y = x @ dequant(words).  Pallas on TPU (or interpret=True for
-    validation); jnp reference elsewhere."""
-    if use_pallas is None:
-        use_pallas = jax.default_backend() == "tpu"
-    lead = x.shape[:-1]
-    x2 = x.reshape(-1, x.shape[-1])
-    M = x2.shape[0]
-    if (use_pallas or interpret) and M % 8 == 0:
-        bm = min(128, M)
+    validation) when the shapes meet the tile contract; jnp reference
+    elsewhere (the CPU-test fallback)."""
+    N = words.shape[-1]
+    x2, lead, M, bm, take_kernel = plan(x, N, K, block_k, use_pallas, interpret)
+    if take_kernel:
         y = kernel.packed_matmul(x2, words, scale, k=k, K=K,
                                  block_m=bm, block_k=block_k,
-                                 interpret=interpret)
+                                 interpret=interpret, out_dtype=out_dtype)[:M]
     else:
-        y = ref.packed_matmul_ref(x2, words, scale, k=k, K=K, block_k=block_k)
+        y = ref.packed_matmul_ref(x2, words, scale, k=k, K=K, block_k=block_k,
+                                  out_dtype=out_dtype)
     return y.reshape(lead + (y.shape[-1],))

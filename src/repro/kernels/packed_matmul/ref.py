@@ -6,12 +6,13 @@ import jax.numpy as jnp
 from ...core import packing
 
 
-def packed_matmul_ref(x, words, scale, *, k: int, K: int, block_k: int):
+def packed_matmul_ref(x, words, scale, *, k: int, K: int, block_k: int,
+                      out_dtype=None):
     """y = x @ (unpack(words) * scale).
 
-    x: (M, K) float; words: (ceil_blocked(K)/pw, N) int32 (block-packed,
-    see core.packing.pack_blocked); scale: (1, N) f32 per-output-channel.
+    x: (M, K) float; words: block-packed int32 (see
+    core.packing.pack_blocked); scale: (1, N) f32 per-output-channel.
     """
     codes = packing.unpack_blocked(words, k, K, block_k, axis=0)
     w = codes.astype(jnp.float32) * scale
-    return jnp.matmul(x.astype(jnp.float32), w).astype(x.dtype)
+    return jnp.matmul(x.astype(jnp.float32), w).astype(out_dtype or x.dtype)

@@ -7,6 +7,8 @@ import jax
 import jax.numpy as jnp
 
 from ..core.nesting import NestedTensor
+from ..kernels.nested_matmul import ops as nested_ops
+from ..kernels.packed_matmul import ops as packed_ops
 
 
 def pdot(x, w, precision=None, preferred=None):
@@ -19,16 +21,42 @@ def pdot(x, w, precision=None, preferred=None):
 
 
 def resolve_weight(w, dtype):
-    """NestedTensor leaves are dequantized on the fly (jnp reference path;
-    the Pallas packed_matmul kernel is the TPU fast path, see kernels/)."""
+    """NestedTensor leaves are dequantized on the fly, honouring the
+    stamped serving mode.  Fallback for non-matmul uses (embedding gather,
+    stacked expert einsums); the matmul hot path is :func:`packed_linear`."""
     if isinstance(w, NestedTensor):
-        return w.full_bit(dtype)
+        return w.dequant(dtype)
     return w
 
 
+def packed_linear(x: jax.Array, nt: NestedTensor, out_dtype=None) -> jax.Array:
+    """Matmul straight from the packed NestQuant words - the serving path
+    never materializes a dense weight.
+
+    Full-bit mode streams BOTH packed words through the fused dual-stream
+    kernel (kernels/nested_matmul); part-bit mode streams ``w_high`` alone
+    through kernels/packed_matmul with the inflated scale s*2^l (Eq. 10).
+    Pallas on TPU, jnp reference on CPU (same storage, same numbers).
+    Leaves with stacked leading dims (e.g. MoE experts) fall back to
+    on-the-fly dequant inside the jit - still no host-side materialize."""
+    if nt.w_high.ndim != 2:
+        return pdot(x, nt.dequant(x.dtype), preferred=out_dtype)
+    if nt.mode == "part":
+        return packed_ops.packed_matmul(x, nt.w_high,
+                                        nt.part_scale.reshape(1, -1),
+                                        k=nt.h, K=nt.K, block_k=nt.block,
+                                        out_dtype=out_dtype)
+    return nested_ops.nested_matmul(x, nt.w_high, nt.w_low,
+                                    nt.scale.reshape(1, -1),
+                                    n=nt.n, h=nt.h, K=nt.K, block_k=nt.block,
+                                    out_dtype=out_dtype)
+
+
 def linear(x: jax.Array, w, b=None) -> jax.Array:
-    w = resolve_weight(w, x.dtype).astype(x.dtype)
-    y = pdot(x, w)
+    if isinstance(w, NestedTensor):
+        y = packed_linear(x, w)
+    else:
+        y = pdot(x, w.astype(x.dtype))
     if b is not None:
         y = y + b.astype(y.dtype)
     return y.astype(x.dtype)

@@ -25,10 +25,11 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
+from ..core.nesting import NestedTensor
 from ..distributed.ctx import shard_hint
 from . import mamba2
 from .attention import blockwise_attention, decode_attention, full_attention
-from .layers import apply_rope, linear, mlp, norm, pdot, resolve_weight
+from .layers import apply_rope, linear, mlp, norm, packed_linear, pdot
 from .moe import moe_ffn
 
 
@@ -400,7 +401,13 @@ def ssm_decode(params, x, cfg, cache, pos):
 def embed_inputs(params, inputs, cfg):
     if cfg.input_kind == "tokens":
         tok = inputs["tokens"]
-        h = params["embed"]["table"][tok].astype(_cdtype(cfg))
+        table = params["embed"]["table"]
+        if isinstance(table, NestedTensor):
+            # row gather straight from the packed words: reads only the
+            # word rows of the batch's tokens, never the whole table.
+            h = table.gather_rows(tok, _cdtype(cfg))
+        else:
+            h = table[tok].astype(_cdtype(cfg))
         h = h * jnp.sqrt(cfg.d_model).astype(h.dtype)
     else:
         h = inputs["embeddings"].astype(_cdtype(cfg))
@@ -408,8 +415,11 @@ def embed_inputs(params, inputs, cfg):
 
 
 def lm_logits(params, h, cfg):
-    w = resolve_weight(params["lm_head"]["w"], h.dtype)
-    logits = pdot(h, w.astype(h.dtype), preferred=jnp.float32)
+    w = params["lm_head"]["w"]
+    if isinstance(w, NestedTensor):
+        logits = packed_linear(h, w, out_dtype=jnp.float32)
+    else:
+        logits = pdot(h, w.astype(h.dtype), preferred=jnp.float32)
     return shard_hint(logits, ("batch", None, "vocab"))
 
 

@@ -54,20 +54,28 @@ class ServeEngine:
 
     # -- switching ---------------------------------------------------------
     def ensure_mode(self, memory_budget_bytes: Optional[int] = None):
-        """Pick full/part-bit from the HBM budget; (re)materialize weights."""
+        """Pick full/part-bit from the HBM budget and flip residency.
+
+        The serving path never materializes dense weights: ``store.params()``
+        is the packed tree with the mode stamped on each leaf, so a switch
+        is an O(1)-per-leaf metadata flip plus the ledgered w_low page-in
+        (upgrade) / page-out (downgrade).  ``stats.switches`` counts only
+        REAL mode changes - first-time parameter pickup is not a switch."""
         want = "full"
         if memory_budget_bytes is not None:
             b = self.store.bytes()
             full_need = b["high"] + b["low"] + b["scales"] + b["fp"]
             if full_need > memory_budget_bytes:
                 want = "part"
-        if want != self.store.mode or self._params is None:
+        changed = want != self.store.mode
+        if changed:
             if want == "full":
                 self.store.to_full()
             else:
                 self.store.to_part()
-            self._params = self.store.params()
             self.stats.switches += 1
+        if changed or self._params is None:
+            self._params = self.store.params()
         self.stats.mode_history.append(self.store.mode)
         return self.store.mode
 

@@ -3,13 +3,16 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (adaptive_round, case_metric, compute_scale, decompose,
                         dequantize, int_range, nest_quantize,
                         numerical_error_table, pack, packed_rows, per_word,
                         quantize_rtn, recompose, sqnr_db, unpack)
-from repro.core.packing import pack_blocked, unpack_blocked
+from repro.core.packing import blocked_rows, pack_blocked, unpack_blocked
 
 
 # ---------------------------------------------------------------------------
@@ -125,8 +128,11 @@ def test_pack_blocked_roundtrip_and_size(k):
     x = jnp.asarray(rng.integers(lo, hi + 1, size=(1024, 16)), jnp.int32)
     words = pack_blocked(x, k, 512, axis=0)
     assert bool(jnp.array_equal(unpack_blocked(words, k, 1024, 512, axis=0), x))
-    # same capacity as the flat layout
-    assert words.shape[0] == 2 * packed_rows(512, k)
+    # exact-bit capacity: k bits/element (blocks are multiples of 32), never
+    # worse than the flat slot-major layout
+    assert words.shape[0] == 2 * blocked_rows(512, k)
+    assert words.shape[0] * 32 == k * 1024
+    assert words.shape[0] <= 2 * packed_rows(512, k)
 
 
 def test_packing_axis_generality():

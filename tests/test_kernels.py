@@ -7,10 +7,13 @@ import jax.numpy as jnp
 
 from repro.core import int_range, packing
 from repro.core.decompose import decompose
+from repro.core.nesting import nest_quantize
 from repro.kernels.flash_attention import kernel as fa_kernel
 from repro.kernels.flash_attention import ref as fa_ref
 from repro.kernels.nest_recompose import kernel as nr_kernel
 from repro.kernels.nest_recompose import ref as nr_ref
+from repro.kernels.nested_matmul import kernel as nm_kernel
+from repro.kernels.nested_matmul import ref as nm_ref
 from repro.kernels.packed_matmul import kernel as pm_kernel
 from repro.kernels.packed_matmul import ref as pm_ref
 
@@ -70,6 +73,121 @@ def test_nest_recompose_exact(nh):
     assert jnp.array_equal(out_ref, out_ker)
     # kernel output must recompose the original codes exactly (compensation)
     assert jnp.array_equal(out_ker.astype(jnp.int32), w_int)
+
+
+# ---------------------------------------------------------------------------
+# packed execution path: full-bit dual-stream + part-bit single-stream
+# matmuls straight from the NestedTensor's stored words (no re-packing)
+# ---------------------------------------------------------------------------
+NH_SWEEP = [(8, 6), (8, 4), (6, 4)]
+
+
+def _nested_weight(n, h, K=1024, N=256, seed=0):
+    rng = np.random.default_rng(seed + 10 * n + h)
+    w = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32) * 0.05)
+    return w, nest_quantize(w, n=n, h=h, rounding="rtn")
+
+
+@pytest.mark.parametrize("nh", NH_SWEEP)
+def test_nested_matmul_dual_stream_matches_dense(nh):
+    """Full-bit: the fused dual-stream kernel reading the STORED packed
+    streams must match x @ dense(full_bit) to <=1e-4 relative error."""
+    n, h = nh
+    K, N, M = 1024, 256, 16
+    w, nt = _nested_weight(n, h, K, N)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
+    dense = x @ nt.full_bit(jnp.float32)
+    scale = nt.scale.reshape(1, -1)
+    y_ker = nm_kernel.nested_matmul(x, nt.w_high, nt.w_low, scale, n=n, h=h,
+                                    K=K, block_m=M, block_k=nt.block,
+                                    interpret=True)
+    y_ref = nm_ref.nested_matmul_ref(x, nt.w_high, nt.w_low, scale, n=n, h=h,
+                                     K=K, block_k=nt.block)
+    rel = float(jnp.linalg.norm(y_ker - dense) / jnp.linalg.norm(dense))
+    assert rel <= 1e-4, rel
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("nh", NH_SWEEP)
+def test_packed_matmul_part_bit_matches_dense(nh):
+    """Part-bit: packed_matmul on the stored w_high stream with the
+    inflated scale s*2^l must match x @ dense(part_bit) to <=1e-4."""
+    n, h = nh
+    K, N, M = 1024, 256, 16
+    w, nt = _nested_weight(n, h, K, N, seed=2)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
+    dense = x @ nt.part_bit(jnp.float32)
+    scale = (nt.scale * (2.0 ** nt.l)).reshape(1, -1)
+    y_ker = pm_kernel.packed_matmul(x, nt.w_high, scale, k=h, K=K,
+                                    block_m=M, block_k=nt.block,
+                                    interpret=True)
+    rel = float(jnp.linalg.norm(y_ker - dense) / jnp.linalg.norm(dense))
+    assert rel <= 1e-4, rel
+
+
+@pytest.mark.parametrize("M", [3, 136])
+def test_dispatch_pads_uneven_m(M):
+    """M that violates the tile contract (decode micro-batch of 3; 136 not
+    a multiple of 128) must STILL run the packed kernel path - the
+    dispatcher pads M and slices the output, it never drops tail rows and
+    never falls back to dense dequant on the serving hot path."""
+    n, h = 8, 4
+    K, N = 1024, 256
+    w, nt = _nested_weight(n, h, K, N, seed=7)
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
+    from repro.kernels.dispatch import plan
+    _, _, _, bm, take_kernel = plan(x, N, K, nt.block, None, True)
+    assert take_kernel and bm in (8, 128)
+    from repro.kernels.nested_matmul import ops as nm_ops
+    from repro.kernels.packed_matmul import ops as pm_ops
+    y = nm_ops.nested_matmul(x, nt.w_high, nt.w_low, nt.scale.reshape(1, -1),
+                             n=n, h=h, K=K, block_k=nt.block, interpret=True)
+    dense = x @ nt.full_bit(jnp.float32)
+    assert y.shape == dense.shape
+    np.testing.assert_allclose(np.asarray(y), np.asarray(dense),
+                               rtol=1e-4, atol=1e-4)
+    assert np.all(np.isfinite(np.asarray(y)))      # tail rows included
+    yp = pm_ops.packed_matmul(x, nt.w_high, nt.part_scale.reshape(1, -1),
+                              k=h, K=K, block_k=nt.block, interpret=True)
+    np.testing.assert_allclose(np.asarray(yp),
+                               np.asarray(x @ nt.part_bit(jnp.float32)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gather_rows_matches_dense_dequant():
+    """Packed embedding gather: rows read straight from the words must
+    equal indexing the dense dequantized table, in both modes."""
+    n, h = 8, 4
+    w, nt = _nested_weight(n, h, K=192, N=128, seed=9)   # 3 blocks of 64
+    rng = np.random.default_rng(10)
+    idx = jnp.asarray(rng.integers(0, 192, size=(2, 7)), jnp.int32)
+    for mode in ("full", "part"):
+        m = nt.with_mode(mode)
+        got = m.gather_rows(idx, jnp.float32)
+        want = m.dequant(jnp.float32)[idx]
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_layers_dispatch_serves_from_packed_words():
+    """models.layers.linear on a NestedTensor leaf must agree with the
+    dense dequantized matmul in BOTH modes (CPU reference dispatch)."""
+    from repro.models.layers import linear
+    n, h = 8, 4
+    w, nt = _nested_weight(n, h, K=512, N=128, seed=4)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(2, 8, 512)).astype(np.float32))
+    y_full = linear(x, nt.with_mode("full"))
+    y_part = linear(x, nt.with_mode("part"))
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.asarray(x @ nt.full_bit(jnp.float32)),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y_part),
+                               np.asarray(x @ nt.part_bit(jnp.float32)),
+                               rtol=1e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize("dims", [(1, 512, 4, 2, 64), (2, 256, 8, 2, 32),

@@ -63,3 +63,45 @@ def test_modes_agree_on_greedy_tokens_mostly(engine):
     part_toks = [tuple(r.out_tokens) for r in part]
     agree = np.mean([a == b_ for a, b_ in zip(full_toks, part_toks)])
     assert agree >= 0.25      # loose: random-init logits are near-uniform
+
+
+def test_serving_path_never_materializes(engine, monkeypatch):
+    """The packed execution path: generate/ensure_mode must perform ZERO
+    materialize() calls - weights are served straight from NestQuant words."""
+    import repro.core.nesting as nesting
+    import repro.core.switching as switching
+    cfg, eng, store = engine
+
+    def _boom(*args, **kwargs):
+        raise AssertionError("materialize() called on the serving path")
+
+    monkeypatch.setattr(nesting, "materialize", _boom)
+    monkeypatch.setattr(switching, "materialize", _boom)
+    eng._params = None                      # force a full param (re)pickup
+    reqs = eng.generate(_reqs(cfg, 2, seed=11))
+    assert all(len(r.out_tokens) == 4 for r in reqs)
+    # and a budget-driven mode flip is also materialize-free
+    b = store.bytes()
+    eng.generate(_reqs(cfg, 2, seed=12),
+                 memory_budget_bytes=b["high"] + b["scales"] + b["fp"])
+    eng.generate(_reqs(cfg, 2, seed=13), memory_budget_bytes=None)
+
+
+def test_ensure_mode_counts_only_real_switches(engine):
+    """stats.switches must not increment on first materialization when the
+    mode did not change (Table-11 switching accounting)."""
+    cfg, _, store = engine
+    store.to_full()
+    eng = ServeEngine(cfg, store, max_batch=2, max_len=32)
+    assert eng.stats.switches == 0
+    eng.ensure_mode(None)                   # already full: params pickup only
+    assert eng.stats.switches == 0
+    eng.ensure_mode(None)                   # no-op
+    assert eng.stats.switches == 0
+    b = store.bytes()
+    eng.ensure_mode(b["high"] + b["scales"] + b["fp"])   # full -> part
+    assert eng.stats.switches == 1
+    eng.ensure_mode(b["high"] + b["scales"] + b["fp"])   # stays part
+    assert eng.stats.switches == 1
+    eng.ensure_mode(None)                   # part -> full
+    assert eng.stats.switches == 2
