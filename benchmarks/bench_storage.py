@@ -1,4 +1,6 @@
-"""Paper Tables 8-10: storage of NestQuant vs diverse-bitwidths models.
+"""Paper Tables 8-10: storage of NestQuant vs diverse-bitwidths models,
+plus the K-rung ladder generalization (one nested artifact vs a zoo of K
+separately-packed PTQ models, DESIGN.md Sec. 8).
 
 Table 8 (ideal reductions) is closed-form; Tables 9/10 are measured from
 actual packed-bit bytes of nested model parameter trees - run on reduced
@@ -10,14 +12,26 @@ from __future__ import annotations
 import jax
 
 from repro.configs import ARCHS
-from repro.core import (diverse_bitwidth_bytes, nest_quantize_tree,
-                        tree_bytes)
+from repro.core import (delta_bits, diverse_bitwidth_bytes,
+                        diverse_ladder_bytes, nest_quantize_tree, tree_bytes,
+                        tree_ladder_bytes)
 from repro.models import make_model
 
 from .common import emit, time_fn
 
 IDEAL = {(8, 4): 0.25, (8, 5): 0.31, (8, 6): 0.36, (8, 7): 0.40,
          (6, 4): 0.30, (6, 5): 0.36}
+
+# ladder chains swept against a same-bitwidth diverse PTQ model zoo
+LADDERS = ((8, 6, 4), (8, 6, 5, 4), (8, 7, 6, 5, 4))
+
+
+def ladder_ideal(bits) -> float:
+    """Closed-form K-rung reduction: stored bits are base + sum(gap_i + 1)
+    vs the zoo's sum of all rung bitwidths (Table 8 generalized)."""
+    b = sorted(bits)
+    nest = b[0] + sum(delta_bits(b))
+    return 1.0 - nest / sum(b)
 
 
 def run():
@@ -43,6 +57,25 @@ def run():
                  f"nest_MB={(b['high']+b['low'])/1e6:.3f};"
                  f"diverse_MB={div['total']/1e6:.3f};reduction={red:.3f};"
                  f"ideal={1-(n+1)/(n+h):.3f}")
+
+    # K-rung ladders: one nested artifact vs a K-model diverse PTQ zoo
+    for arch in ("qwen2-1.5b", "mamba2-780m"):
+        cfg = ARCHS[arch].reduced()
+        params = make_model(cfg).init(rng)
+        for bits in LADDERS:
+            nested = nest_quantize_tree(params, bits=bits)
+            lb = tree_ladder_bytes(nested)
+            zoo = diverse_ladder_bytes(nested, bits)
+            nest_total = lb["base"] + sum(lb["deltas"])
+            red = 1 - nest_total / max(zoo["total"], 1)
+            tag = "_".join(str(x) for x in sorted(bits, reverse=True))
+            per_rung = ";".join(
+                f"delta{i}_MB={d/1e6:.3f}" for i, d in enumerate(lb["deltas"]))
+            emit(f"ladder_storage_{arch}_{tag}", 0.0,
+                 f"base_MB={lb['base']/1e6:.3f};{per_rung};"
+                 f"nest_MB={nest_total/1e6:.3f};zoo_MB={zoo['total']/1e6:.3f};"
+                 f"reduction={red:.3f};ideal={ladder_ideal(bits):.3f}")
+            assert red > 0.2        # the deeper the ladder, the bigger the win
 
 
 if __name__ == "__main__":

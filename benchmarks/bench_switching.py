@@ -1,9 +1,14 @@
-"""Paper Table 11: switching overheads (page-in/out) and reductions.
+"""Paper Table 11: switching overheads (page-in/out) and reductions,
+plus the K-rung ladder generalization (DESIGN.md Sec. 8).
 
 NestQuant upgrade = page-in bytes(w_low) with ZERO page-out; the
 diverse-bitwidths baseline pages in the full INT-n model and pages out the
 INT-h model.  Reduction = 1 - nest/(div_in + div_out), the paper's
 'Reduced Overhead' column (57-87% across configs).
+
+The ladder sweep emits one row PER ADJACENT RUNG MOVE of an 8>6>4 (and
+8>6>5>4) chain: upgrading rung k->k+1 pages in exactly bytes(delta_k),
+while the K-model diverse-bitwidths zoo swaps whole packed models.
 
 Also measures the WALL-CLOCK switch latency of the packed execution path
 (an O(#leaves) residency/metadata flip: store.params() re-stamps the mode
@@ -52,6 +57,39 @@ def run():
                  f"reduction={red:.3f};paper_theory={theo:.3f}")
             assert up_out == 0
             assert red > 0.4
+
+    # -- K-rung ladder: per-rung page-in/page-out vs a K-model PTQ zoo ------
+    for arch in ("qwen2-1.5b", "mamba2-780m"):
+        cfg = ARCHS[arch].reduced()
+        params = make_model(cfg).init(rng)
+        for bits in ((8, 6, 4), (8, 6, 5, 4)):
+            nested = nest_quantize_tree(params, bits=bits)
+            store = NestQuantStore(nested, mode="part")  # n/h from the tree
+            lb = store.ladder_bytes()
+            div = store.diverse_ladder_baseline(bits)
+            store.to_full()                       # climb the whole ladder
+            store.to_part()                       # and back down
+            tag = "_".join(str(b) for b in sorted(bits, reverse=True))
+            for (r_from, r_to, pin, pout) in store.ledger.events:
+                # diverse baseline swaps whole packed models on every move
+                div_in = div["models"][r_to]
+                div_out = div["models"][r_from]
+                red = 1.0 - (pin + pout) / max(div_in + div_out, 1)
+                emit(f"ladder_{arch}_{tag}_rung{r_from}to{r_to}", 0.0,
+                     f"nest_pagein_MB={pin/1e6:.3f};"
+                     f"nest_pageout_MB={pout/1e6:.3f};"
+                     f"div_pagein_MB={div_in/1e6:.3f};"
+                     f"div_pageout_MB={div_out/1e6:.3f};"
+                     f"reduction={red:.3f}")
+                assert red > 0.4
+            # storage: one nested artifact vs the K-model zoo
+            nest_total = lb["base"] + sum(lb["deltas"])
+            emit(f"ladder_{arch}_{tag}_storage", 0.0,
+                 f"nest_MB={nest_total/1e6:.3f};"
+                 f"zoo_MB={div['total']/1e6:.3f};"
+                 f"reduction={1 - nest_total/max(div['total'], 1):.3f}")
+            assert store.ledger.page_in_bytes == store.ledger.page_out_bytes \
+                == sum(lb["deltas"])
 
     # -- switch latency: O(1) residency flip vs seed full-tree dequant ------
     cfg = ARCHS["qwen2-1.5b"].reduced()

@@ -47,6 +47,18 @@ def main():
           f"{sum(store.diverse_baseline()[k] for k in ('switch_page_in', 'switch_page_out'))/1e6:.2f}MB "
           f"-> {store.switch_reduction():.0%} cheaper")
 
+    # 6. beyond the paper: a K-rung ladder (INT8 > INT6 > INT4) stores one
+    # base plus one compensated delta per level; each rung recomposes its
+    # codes exactly, and every adjacent move pages one delta stream
+    ladder = nest_quantize_tree(params, bits=(8, 6, 4))
+    store3 = NestQuantStore(ladder, mode="part")
+    lb = store3.ladder_bytes()
+    print(f"ladder 8>6>4: base={lb['base']/1e6:.2f}MB + deltas "
+          f"{[round(d/1e6, 2) for d in lb['deltas']]}MB")
+    store3.to_full()                       # climbs 4 -> 6 -> 8
+    for (r_from, r_to, pin, _) in store3.ledger.events:
+        print(f"  rung {r_from} -> {r_to}: paged in {pin/1e6:.2f}MB")
+
 
 if __name__ == "__main__":
     main()

@@ -1,9 +1,12 @@
 """End-to-end driver: serve a small model with batched requests while the
-memory budget changes - the paper's deployment scenario (Sec. 3.3.3).
+memory budget changes - the paper's deployment scenario (Sec. 3.3.3),
+generalized to a 3-rung INT8 > INT6 > INT4 nesting ladder.
 
-The engine starts part-bit (tight budget), upgrades to full-bit when HBM
-frees up, and downgrades again under pressure; the ledger shows the
-asymmetric page-in/page-out costs of Table 11.
+The engine picks the HIGHEST rung fitting the HBM budget at every request
+batch: tight budgets serve the INT4 base, a mid budget pages in one delta
+stream for INT6, and a loose budget climbs to full INT8; the ledger shows
+that every adjacent rung move touches exactly one delta stream (the
+Table 11 accounting, K-rung).
 
   PYTHONPATH=src python examples/serve_switching.py
 """
@@ -16,20 +19,28 @@ from repro.core import NestQuantStore, nest_quantize_tree
 from repro.models import make_model
 from repro.serving import Request, ServeEngine
 
+BITS = (8, 6, 4)
+
 
 def main():
     cfg = get_config("qwen2-1.5b").reduced()
     model = make_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    nested = nest_quantize_tree(params, n=8, h=4)
-    store = NestQuantStore(nested, n=8, h=4, mode="part", dtype=jnp.float32)
+    nested = nest_quantize_tree(params, bits=BITS)
+    store = NestQuantStore(nested, mode="part", dtype=jnp.float32)
     engine = ServeEngine(cfg, store, max_batch=8, max_len=64)
 
-    b = store.bytes()
-    full_need = b["high"] + b["low"] + b["scales"] + b["fp"]
-    budgets = [("busy evening (plenty of HBM)", full_need * 2),
-               ("co-tenant spike (HBM squeezed)", full_need - b["low"] // 2),
-               ("spike over", full_need * 2)]
+    lb = store.ladder_bytes()
+    rung_bits = sorted(BITS)
+    need = [store.rung_resident_bytes(r) for r in range(store.num_rungs)]
+    print("resident bytes per rung: " + ", ".join(
+        f"rung{r}(int{rung_bits[r]})={need[r]/1e6:.2f}MB"
+        for r in range(store.num_rungs)))
+
+    budgets = [("night shift (plenty of HBM)", need[-1] * 2),
+               ("co-tenant spike (HBM squeezed)", need[0] + lb["deltas"][0] // 2),
+               ("partial recovery (mid budget)", need[1] + lb["deltas"][1] // 2),
+               ("spike over", need[-1] * 2)]
 
     rng = np.random.default_rng(0)
     uid = 0
@@ -39,16 +50,20 @@ def main():
                         max_new_tokens=6) for i in range(8)]
         uid += 8
         engine.generate(reqs, memory_budget_bytes=int(budget))
-        print(f"[{label}] -> mode={store.mode}; sample output "
+        print(f"[{label}] -> rung={store.rung} ({store.mode}); sample output "
               f"{reqs[0].out_tokens}; resident={store.resident_bytes()/1e6:.2f}MB")
     lg = store.ledger
-    print(f"\nledger after {lg.switches} switches: "
+    print(f"\nledger after {lg.switches} adjacent rung moves: "
           f"page-in {lg.page_in_bytes/1e6:.2f}MB, "
           f"page-out {lg.page_out_bytes/1e6:.2f}MB")
+    for (r_from, r_to, pin, pout) in lg.events:
+        print(f"  rung {r_from} -> {r_to}: in {pin/1e6:.2f}MB, "
+              f"out {pout/1e6:.2f}MB")
     print(f"switching overhead vs diverse-bitwidth models: "
           f"-{store.switch_reduction():.0%}")
     print(f"engine stats: {engine.stats.prefills} prefills, "
-          f"{engine.stats.decode_steps} decode steps")
+          f"{engine.stats.decode_steps} decode steps, "
+          f"modes {engine.stats.mode_history}")
 
 
 if __name__ == "__main__":

@@ -3,10 +3,14 @@ from .quantizer import (compute_scale, quantize_rtn, dequantize, perturbation,
                         int_range, sqnr_db)
 from .squant import adaptive_round, case_metric
 from .decompose import (split_high, split_low, recompose, decompose,
-                        recompose_error, numerical_error_table, ROUNDINGS)
+                        recompose_error, numerical_error_table, ROUNDINGS,
+                        normalize_bits, ladder_gaps, delta_bits,
+                        chain_decompose, chain_recompose)
 from .packing import (pack, unpack, pack_blocked, unpack_blocked, per_word,
                       packed_rows, packed_nbytes, blocked_rows, choose_block)
 from .nesting import (NestedTensor, nest_quantize, nest_quantize_tree,
-                      materialize, set_tree_mode, tree_bytes,
-                      critical_nested_bits, default_predicate)
-from .switching import NestQuantStore, SwitchLedger, diverse_bitwidth_bytes
+                      materialize, set_tree_mode, set_tree_rung, tree_bytes,
+                      tree_ladder_bytes, tree_num_rungs, critical_nested_bits,
+                      default_predicate, mode_to_rung, rung_to_mode)
+from .switching import (NestQuantStore, SwitchLedger, diverse_bitwidth_bytes,
+                        diverse_ladder_bytes)

@@ -16,7 +16,7 @@ and clip-range + error fits the signed (l+1)-bit range [-2^l, 2^l - 1].
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -72,6 +72,82 @@ def decompose(w_int: jax.Array, n: int, h: int, method: str = "adaptive",
     w_high = split_high(w_int, n, h, method=method, group_size=group_size)
     w_low = split_low(w_int, w_high, n, h, compensate=compensate)
     return w_high, w_low
+
+
+# ---------------------------------------------------------------------------
+# K-rung nesting ladder: INT-b_{R-1} > ... > INT-b_1 > INT-b_0
+# (DESIGN.md Sec. 8).  The paper nests exactly one lower-bit model inside
+# the full-bit one; chaining Eq. 6/Eq. 11 per adjacent bitwidth pair gives
+# a LADDER of operating points, each level carrying its own 1-bit
+# compensated delta so every rung recomposes its codes exactly.
+# ---------------------------------------------------------------------------
+def normalize_bits(bits: Sequence[int]) -> Tuple[int, ...]:
+    """Canonical ascending rung bitwidths, e.g. (8, 6, 4) -> (4, 6, 8).
+
+    Rung r uses bits[r]; rung 0 is the always-resident base, the top rung
+    is the full-bit model.  Bitwidths must be distinct, >= 2, and <= 32."""
+    b = tuple(sorted(int(x) for x in bits))
+    assert len(b) >= 2, f"a ladder needs >= 2 rungs, got {bits!r}"
+    assert len(set(b)) == len(b), f"duplicate bitwidths in {bits!r}"
+    assert b[0] >= 2 and b[-1] <= 32, bits
+    return b
+
+
+def ladder_gaps(bits: Sequence[int]) -> Tuple[int, ...]:
+    """Per-level shift widths: gaps[i] = bits[i+1] - bits[i] (ascending)."""
+    b = normalize_bits(bits)
+    return tuple(b[i + 1] - b[i] for i in range(len(b) - 1))
+
+
+def delta_bits(bits: Sequence[int]) -> Tuple[int, ...]:
+    """Stored width of each delta stream: gap + 1 (the paper's extra
+    compensation bit, applied PER LEVEL so each rung is exact)."""
+    return tuple(g + 1 for g in ladder_gaps(bits))
+
+
+def chain_decompose(w_int: jax.Array, bits: Sequence[int],
+                    method: str = "adaptive",
+                    group_size: Optional[int] = None,
+                    split_fn=None,
+                    ) -> Tuple[jax.Array, List[jax.Array]]:
+    """Recursive Eq. 6/Eq. 11 down the ladder - the ONE ladder-split loop
+    (nest_quantize drives it too, via ``split_fn``).
+
+    Returns ``(w_base, deltas)``: ``w_base`` holds INT-bits[0] codes and
+    ``deltas[i]`` the (gaps[i]+1)-bit compensated delta that upgrades rung
+    i to rung i+1:  w_{i+1} = w_i * 2^gaps[i] + deltas[i]  (exactly).
+
+    ``split_fn(cur, b_hi, b_lo)`` overrides the per-level INT-b_lo
+    quantization of the current codes (default: :func:`split_high` with
+    ``method``, whose 'adaptive' flip group is the LAST axis; nest_quantize
+    passes a variant whose flip group is the weight's reduction axis K)."""
+    b = normalize_bits(bits)
+    if split_fn is None:
+        split_fn = lambda cur, b_hi, b_lo: split_high(
+            cur, b_hi, b_lo, method=method, group_size=group_size)
+    cur = w_int.astype(jnp.int32)
+    deltas_desc = []
+    for b_hi, b_lo in zip(reversed(b[1:]), reversed(b[:-1])):
+        hi = split_fn(cur, b_hi, b_lo)
+        deltas_desc.append(split_low(cur, hi, b_hi, b_lo, compensate=True))
+        cur = hi
+    return cur, deltas_desc[::-1]
+
+
+def chain_recompose(w_base: jax.Array, deltas: Sequence[jax.Array],
+                    bits: Sequence[int], rung: Optional[int] = None) -> jax.Array:
+    """Climb the ladder from the base codes: apply Eq. 6 per resident delta.
+
+    ``rung`` limits the climb (None = top); returns INT-bits[rung] codes."""
+    b = normalize_bits(bits)
+    if rung is None:
+        rung = len(b) - 1
+    assert 0 <= rung < len(b), (rung, b)
+    assert len(deltas) >= rung, (len(deltas), rung)
+    cur = w_base.astype(jnp.int32)
+    for i in range(rung):
+        cur = recompose(cur, deltas[i], b[i + 1], b[i])
+    return cur
 
 
 def recompose_error(w_int: jax.Array, n: int, h: int, method: str,

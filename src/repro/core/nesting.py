@@ -1,10 +1,14 @@
-"""NestQuant procedures (paper Algorithm 1 + Eq. 12 selection rule).
+"""NestQuant procedures (paper Algorithm 1 + Eq. 12 selection rule),
+generalized to a K-rung nesting ladder (DESIGN.md Sec. 8).
 
 ``nest_quantize`` runs the layer-wise procedure on one weight matrix:
   step 1  INT-n Hessian-based (SQuant-style) quantization of w
-  step 2  INT-h Hessian-based quantization of w_int / 2^l  ->  w_high,
-          w_low = w_int - w_high * 2^l with extra 1-bit compensation
-  step 3  pack h-bit and (l+1)-bit weights (packed-bit tensors)
+  step 2  recursively, per adjacent ladder pair (b_hi > b_lo): INT-b_lo
+          Hessian-based quantization of the current codes / 2^gap, plus
+          the (gap+1)-bit compensated delta (paper Eq. 11 applied per
+          level) - the paper's single split is the 2-rung special case
+  step 3  pack the base-bit codes and every delta stream (packed-bit
+          tensors, the kernels' blocked layout)
 
 ``nest_quantize_tree`` applies it over a model parameter pytree, nesting
 every matmul weight (>= 2D, both trailing dims >= min_dim) and keeping
@@ -16,14 +20,15 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from . import packing
-from .decompose import recompose, split_high, split_low
+from .decompose import (chain_decompose, chain_recompose, delta_bits,
+                        ladder_gaps, normalize_bits, recompose, split_high)
 from .quantizer import compute_scale, dequantize, int_range
 from .squant import adaptive_round
 
@@ -34,117 +39,238 @@ from .squant import adaptive_round
 @jax.tree_util.register_pytree_node_class
 @dataclass
 class NestedTensor:
-    """Packed NestQuant representation of one weight tensor.
+    """Packed NestQuant ladder representation of one weight tensor.
 
     The logical weight has shape ``shape`` = (..., K, N); quantization is
     per-output-channel (axis N), the SQuant flip group is the reduction
-    axis K.  ``w_high`` holds packed h-bit codes, ``w_low`` packed
-    (l+1)-bit codes (paper's compensation), both BLOCK-packed along K
+    axis K.  ``w_base`` holds packed bits[0]-bit base codes and
+    ``deltas[i]`` the packed (gap_i+1)-bit compensated delta that upgrades
+    rung i to rung i+1 (paper Eq. 11 per level), all BLOCK-packed along K
     (core.packing.pack_blocked with ``block`` elements per block) - the
-    layout the Pallas packed/nested matmul kernels stream directly, so
-    serving never materializes a dense weight.
+    layout the Pallas packed/nested/ladder matmul kernels stream directly,
+    so serving never materializes a dense weight.  The paper's two-level
+    nesting is the ``bits=(h, n)`` special case with one delta stream.
 
-    ``mode`` ('full' | 'part') is static metadata stamped by the switching
-    store: it selects which packed stream(s) the model-side matmul
-    dispatch reads.  The arrays themselves are identical in both modes -
-    a mode switch is a pure residency/metadata flip.
+    ``rung`` is static metadata stamped by the switching store: it selects
+    how many packed streams (base + deltas[:rung]) the model-side matmul
+    dispatch reads.  The arrays themselves are identical at every rung -
+    a rung switch is a pure residency/metadata flip.
     """
-    w_high: jax.Array          # packed int32, (..., K/block*blocked_rows(block,h), N)
-    w_low: jax.Array           # packed int32, (..., K/block*blocked_rows(block,l+1), N)
-    scale: jax.Array           # f32, (..., 1, N)
-    shape: Tuple[int, ...]     # logical shape
-    n: int
-    h: int
+    w_base: jax.Array             # packed int32, (..., K/block*blocked_rows(block,bits[0]), N)
+    deltas: Tuple[jax.Array, ...]  # packed int32 delta streams, ascending
+    scale: jax.Array              # f32, (..., 1, N) - the TOP-rung scale
+    shape: Tuple[int, ...]        # logical shape
+    bits: Tuple[int, ...]         # ascending rung bitwidths, e.g. (4, 6, 8)
     block: int = packing.DEFAULT_BLOCK   # pack block along K (= kernel block_k)
-    mode: str = "full"                   # which streams serving reads
+    rung: int = -1                       # resident/serving rung (-1 = top)
+
+    def __post_init__(self):
+        self.bits = tuple(self.bits)
+        self.deltas = tuple(self.deltas)
+        self.rung = check_rung(self.rung, len(self.bits))
 
     # -- pytree plumbing ----------------------------------------------------
     def tree_flatten(self):
-        return ((self.w_high, self.w_low, self.scale),
-                (self.shape, self.n, self.h, self.block, self.mode))
+        return ((self.w_base,) + tuple(self.deltas) + (self.scale,),
+                (self.shape, self.bits, self.block, self.rung))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        w_high, w_low, scale = children
-        shape, n, h, block, mode = aux
-        return cls(w_high, w_low, scale, shape, n, h, block, mode)
+        shape, bits, block, rung = aux
+        w_base, deltas, scale = children[0], children[1:-1], children[-1]
+        return cls(w_base, tuple(deltas), scale, shape, bits, block, rung)
+
+    # -- rung metadata -------------------------------------------------------
+    @property
+    def num_rungs(self) -> int:
+        return len(self.bits)
+
+    @property
+    def top(self) -> int:
+        return len(self.bits) - 1
+
+    def with_rung(self, rung: int) -> "NestedTensor":
+        rung = check_rung(rung, self.num_rungs)
+        if rung == self.rung:
+            return self
+        return NestedTensor(self.w_base, self.deltas, self.scale, self.shape,
+                            self.bits, self.block, rung)
 
     def with_mode(self, mode: str) -> "NestedTensor":
-        assert mode in ("full", "part"), mode
-        if mode == self.mode:
-            return self
-        return NestedTensor(self.w_high, self.w_low, self.scale, self.shape,
-                            self.n, self.h, self.block, mode)
+        """Two-level-era alias: 'full' = top rung, 'part' = base rung."""
+        return self.with_rung(mode_to_rung(mode, self.num_rungs))
+
+    @property
+    def mode(self) -> str:
+        return rung_to_mode(self.rung, self.num_rungs)
 
     # -- derived ------------------------------------------------------------
     @property
+    def n(self) -> int:
+        """Full (top-rung) bitwidth."""
+        return self.bits[-1]
+
+    @property
+    def h(self) -> int:
+        """Base (always-resident) bitwidth - the paper's nested part."""
+        return self.bits[0]
+
+    @property
     def l(self) -> int:
         return self.n - self.h
+
+    @property
+    def gaps(self) -> Tuple[int, ...]:
+        return ladder_gaps(self.bits)
 
     @property
     def K(self) -> int:
         return self.shape[-2]
 
     @property
+    def w_high(self) -> jax.Array:
+        """Two-level-era alias for the packed base stream."""
+        return self.w_base
+
+    @property
+    def w_low(self) -> jax.Array:
+        """Two-level-era alias: the single delta stream of a 2-rung tensor."""
+        assert len(self.deltas) == 1, \
+            f"w_low is ambiguous on a {self.num_rungs}-rung ladder"
+        return self.deltas[0]
+
+    def rung_scale(self, rung: int) -> jax.Array:
+        """Per-rung dequant scale s * 2^(n - bits[rung]) (Eq. 10 per rung)."""
+        return self.scale * (2.0 ** (self.bits[-1] - self.bits[rung]))
+
+    @property
     def part_scale(self) -> jax.Array:
         """Inflated part-bit scale s * 2^l (Eq. 10) - the one definition
         shared by the dense, gather, and kernel part-bit paths."""
-        return self.scale * (2.0 ** self.l)
+        return self.rung_scale(0)
+
+    # -- byte accounting -----------------------------------------------------
+    def nbytes_base(self) -> int:
+        return int(np.prod(self.w_base.shape)) * 4
+
+    def nbytes_delta(self, i: int) -> int:
+        return int(np.prod(self.deltas[i].shape)) * 4
+
+    def stream_nbytes(self) -> Tuple[int, ...]:
+        """Per-stream packed bytes: (base, delta_0, ..., delta_{R-2})."""
+        return (self.nbytes_base(),) + tuple(
+            self.nbytes_delta(i) for i in range(len(self.deltas)))
 
     def nbytes_high(self) -> int:
-        return int(np.prod(self.w_high.shape)) * 4
+        return self.nbytes_base()
 
     def nbytes_low(self) -> int:
-        return int(np.prod(self.w_low.shape)) * 4
+        """Bytes above the base: ALL delta streams together."""
+        return sum(self.nbytes_delta(i) for i in range(len(self.deltas)))
 
     def nbytes_scales(self) -> int:
         return int(np.prod(self.scale.shape)) * 4
 
     # -- materialization ----------------------------------------------------
+    def codes_base(self) -> jax.Array:
+        return packing.unpack_blocked(self.w_base, self.bits[0], self.K,
+                                      self.block, axis=self.w_base.ndim - 2)
+
+    def codes_delta(self, i: int) -> jax.Array:
+        width = delta_bits(self.bits)[i]
+        return packing.unpack_blocked(self.deltas[i], width, self.K,
+                                      self.block, axis=self.deltas[i].ndim - 2)
+
+    def codes_at(self, rung: int) -> jax.Array:
+        """INT-bits[rung] codes: climb the ladder from the base (Eq. 6 per
+        resident delta) - exact at every rung by per-level compensation."""
+        rung = check_rung(rung, self.num_rungs)
+        return chain_recompose(self.codes_base(),
+                               [self.codes_delta(i) for i in range(rung)],
+                               self.bits, rung)
+
     def codes_high(self) -> jax.Array:
-        return packing.unpack_blocked(self.w_high, self.h, self.K, self.block,
-                                      axis=self.w_high.ndim - 2)
+        return self.codes_base()
 
     def codes_low(self) -> jax.Array:
-        return packing.unpack_blocked(self.w_low, self.l + 1, self.K, self.block,
-                                      axis=self.w_low.ndim - 2)
+        assert len(self.deltas) == 1, \
+            f"codes_low is ambiguous on a {self.num_rungs}-rung ladder"
+        return self.codes_delta(0)
 
     def codes_full(self) -> jax.Array:
-        return recompose(self.codes_high(), self.codes_low(), self.n, self.h)
+        return self.codes_at(self.top)
 
-    def part_bit(self, dtype=jnp.bfloat16) -> jax.Array:
-        """Dequantized part-bit weight: s * 2^l * w_high (Eq. 10).
+    def rung_weight(self, rung: int, dtype=jnp.bfloat16) -> jax.Array:
+        """Dequantized rung-``rung`` weight: s * 2^(n-b_r) * codes_at(r).
 
         (No reshape: unpack restores the logical trailing dims, and leading
         stacked dims may have been sliced away by a layer scan.)"""
-        return dequantize(self.codes_high(), self.part_scale, dtype)
+        rung = check_rung(rung, self.num_rungs)
+        return dequantize(self.codes_at(rung), self.rung_scale(rung), dtype)
+
+    def part_bit(self, dtype=jnp.bfloat16) -> jax.Array:
+        """Dequantized base-rung weight: s * 2^l * w_base (Eq. 10)."""
+        return self.rung_weight(0, dtype)
 
     def full_bit(self, dtype=jnp.bfloat16) -> jax.Array:
         """Dequantized full-bit weight after page-in + recompose."""
-        return dequantize(self.codes_full(), self.scale, dtype)
+        return self.rung_weight(self.top, dtype)
 
     def dequant(self, dtype=jnp.bfloat16) -> jax.Array:
-        """Dequantize according to the stamped serving ``mode``."""
-        return self.full_bit(dtype) if self.mode == "full" else self.part_bit(dtype)
+        """Dequantize according to the stamped serving ``rung``."""
+        return self.rung_weight(self.rung, dtype)
 
     def gather_rows(self, idx: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
         """Dequantized logical rows ``idx`` along the packed K axis, read
         straight from the packed words (the embedding-gather path: only the
         word rows covering the requested tokens are touched, never the
         whole table).  Returns (*idx.shape, N) in ``dtype``, honouring
-        ``mode``."""
-        assert self.w_high.ndim == 2, "row gather expects a 2-D weight"
+        ``rung``."""
+        assert self.w_base.ndim == 2, "row gather expects a 2-D weight"
         flat = idx.reshape(-1)
-        codes = packing.gather_block_rows(self.w_high, self.h, self.block, flat)
-        if self.mode == "full":
-            low = packing.gather_block_rows(self.w_low, self.l + 1,
-                                            self.block, flat)
-            codes = recompose(codes, low, self.n, self.h)
-            scale = self.scale
-        else:
-            scale = self.part_scale
+        widths = delta_bits(self.bits)
+        codes = packing.gather_block_rows(self.w_base, self.bits[0],
+                                          self.block, flat)
+        for i in range(self.rung):
+            d = packing.gather_block_rows(self.deltas[i], widths[i],
+                                          self.block, flat)
+            codes = recompose(codes, d, self.bits[i + 1], self.bits[i])
+        scale = self.rung_scale(self.rung)
         out = dequantize(codes, scale, dtype)        # scale (1, N) broadcasts
         return out.reshape(tuple(idx.shape) + (self.shape[-1],))
+
+
+def check_rung(rung: int, num_rungs: int) -> int:
+    """Validate a rung index (python-style negatives allowed: -1 = top).
+
+    Out-of-range indices RAISE instead of wrapping - silently serving a
+    different operating point than requested would corrupt ledger and
+    quality accounting."""
+    if not -num_rungs <= rung < num_rungs:
+        raise ValueError(
+            f"rung {rung} out of range for a {num_rungs}-rung ladder")
+    return rung % num_rungs
+
+
+def mode_to_rung(mode, num_rungs: int) -> int:
+    """'part' -> 0, 'full' -> top, 'rungK' -> K, ints pass through."""
+    if isinstance(mode, int):
+        return check_rung(mode, num_rungs)
+    if mode == "full":
+        return num_rungs - 1
+    if mode == "part":
+        return 0
+    if isinstance(mode, str) and mode.startswith("rung"):
+        return check_rung(int(mode[4:]), num_rungs)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def rung_to_mode(rung: int, num_rungs: int) -> str:
+    if rung == num_rungs - 1:
+        return "full"
+    if rung == 0:
+        return "part"
+    return f"rung{rung}"
 
 
 # ---------------------------------------------------------------------------
@@ -161,14 +287,38 @@ def critical_nested_bits(model_size_mb: float, n: int = 8) -> int:
 # ---------------------------------------------------------------------------
 # Algorithm 1 on a single (K, N) (or batched (..., K, N)) weight
 # ---------------------------------------------------------------------------
+def _split_level(cur: jax.Array, b_hi: int, b_lo: int, rounding: str,
+                 group_size: Optional[int]) -> jax.Array:
+    """INT-b_lo quantization of INT-b_hi codes / 2^gap (one ladder level).
+
+    For 'adaptive' the CASE flip group is the reduction axis K (axis -2 of
+    the weight), hence the swapaxes dance; other roundings go through
+    decompose.split_high."""
+    gap = b_hi - b_lo
+    if rounding == "adaptive":
+        vt = jnp.swapaxes(cur.astype(jnp.float32) / (2 ** gap), -1, -2)
+        lo, hi = int_range(b_lo)
+        return jnp.swapaxes(
+            jnp.clip(adaptive_round(vt, b_lo, group_size=group_size), lo, hi),
+            -1, -2).astype(jnp.int32)
+    return split_high(cur, b_hi, b_lo, method=rounding)
+
+
 def nest_quantize(w: jax.Array, n: int = 8, h: Optional[int] = None,
                   rounding: str = "adaptive",
                   group_size: Optional[int] = None,
-                  block: Optional[int] = None) -> NestedTensor:
+                  block: Optional[int] = None,
+                  bits: Optional[Sequence[int]] = None) -> NestedTensor:
+    """Algorithm 1, ladder-generalized.  ``bits`` (any order, e.g.
+    ``(8, 6, 4)``) selects the rung chain; when omitted the paper's
+    two-level ``(n, h)`` nesting is used (``h=None`` -> Eq. 12)."""
     assert w.ndim >= 2, "nest_quantize expects a matmul weight (..., K, N)"
-    if h is None:
-        h = critical_nested_bits(w.size * 4 / 1e6, n)
-    l = n - h
+    if bits is None:
+        if h is None:
+            h = critical_nested_bits(w.size * 4 / 1e6, n)
+        bits = (h, n)
+    bits = normalize_bits(bits)
+    n = bits[-1]
     w = w.astype(jnp.float32)
 
     # step 1: INT-n quantization, per-output-channel scale (reduced over the
@@ -185,30 +335,27 @@ def nest_quantize(w: jax.Array, n: int = 8, h: Optional[int] = None,
         lo, hi = int_range(n)
         w_int = jnp.clip(jnp.round(v), lo, hi).astype(jnp.int32)
 
-    # step 2: INT-h quantization of w_int / 2^l (decomposition with the
-    # chosen rounding) + compensated lower part.
-    if rounding == "adaptive":
-        vt = jnp.swapaxes(w_int.astype(jnp.float32) / (2 ** l), -1, -2)
-        lo_h, hi_h = int_range(h)
-        w_high = jnp.swapaxes(
-            jnp.clip(adaptive_round(vt, h, group_size=group_size), lo_h, hi_h), -1, -2
-        ).astype(jnp.int32)
-    else:
-        w_high = split_high(w_int, n, h, method=rounding)
-    w_low = split_low(w_int, w_high, n, h, compensate=True)
+    # step 2: walk the ladder top-down: at each adjacent pair quantize the
+    # current codes to the lower bitwidth with the chosen rounding and keep
+    # the (gap+1)-bit compensated delta (Eq. 11 per level, exact).
+    cur, deltas = chain_decompose(
+        w_int, bits,
+        split_fn=lambda c, b_hi, b_lo: _split_level(c, b_hi, b_lo,
+                                                    rounding, group_size))
 
-    # step 3: block-pack h-bit and (l+1)-bit weights along K - the layout
-    # the Pallas packed/nested matmul kernels consume directly.
+    # step 3: block-pack the base codes and every delta stream along K -
+    # the layout the Pallas packed/nested/ladder matmul kernels consume.
     ax = w.ndim - 2
     if block is None:
         block = packing.choose_block(w.shape[-2])
+    widths = delta_bits(bits)
     return NestedTensor(
-        w_high=packing.pack_blocked(w_high, h, block, axis=ax),
-        w_low=packing.pack_blocked(w_low, l + 1, block, axis=ax),
+        w_base=packing.pack_blocked(cur, bits[0], block, axis=ax),
+        deltas=tuple(packing.pack_blocked(d, widths[i], block, axis=ax)
+                     for i, d in enumerate(deltas)),
         scale=scale,
         shape=tuple(w.shape),
-        n=n,
-        h=h,
+        bits=bits,
         block=block,
     )
 
@@ -235,26 +382,31 @@ def nest_quantize_tree(params, n: int = 8, h: Optional[int] = None,
                        rounding: str = "adaptive",
                        predicate: Callable[[str, Any], bool] = default_predicate,
                        group_size: Optional[int] = None,
-                       block: Optional[int] = None):
+                       block: Optional[int] = None,
+                       bits: Optional[Sequence[int]] = None):
     """Apply Algorithm 1 across a parameter pytree.
 
     Returns a pytree of the same structure where nested leaves are
-    ``NestedTensor`` and the rest are unchanged.  ``h=None`` selects the
+    ``NestedTensor`` and the rest are unchanged.  ``bits`` selects a
+    K-rung ladder (e.g. ``(8, 6, 4)``); otherwise ``h=None`` selects the
     critical nested combination per-model via Eq. 12 (model size in MB).
     """
-    if h is None:
-        size_mb = sum(
-            x.size * 4 / 1e6 for x in jax.tree_util.tree_leaves(params)
-            if hasattr(x, "size")
-        )
-        h = critical_nested_bits(size_mb, n)
+    if bits is None:
+        if h is None:
+            size_mb = sum(
+                x.size * 4 / 1e6 for x in jax.tree_util.tree_leaves(params)
+                if hasattr(x, "size")
+            )
+            h = critical_nested_bits(size_mb, n)
+        bits = (h, n)
+    bits = normalize_bits(bits)
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     out = []
     for path, leaf in flat:
         key = jax.tree_util.keystr(path)
         if predicate(key, leaf):
-            out.append(nest_quantize(leaf, n=n, h=h, rounding=rounding,
+            out.append(nest_quantize(leaf, rounding=rounding, bits=bits,
                                      group_size=group_size, block=block))
         else:
             out.append(leaf)
@@ -262,27 +414,50 @@ def nest_quantize_tree(params, n: int = 8, h: Optional[int] = None,
 
 
 def materialize(nested_params, mode: str = "full", dtype=jnp.bfloat16):
-    """Dequantize a nested pytree to dense weights (mode: 'full' | 'part')."""
+    """Dequantize a nested pytree to dense weights.
+
+    ``mode``: 'full' | 'part' | 'rungK' | an int rung index."""
     def leaf_fn(x):
         if isinstance(x, NestedTensor):
-            return x.full_bit(dtype) if mode == "full" else x.part_bit(dtype)
+            return x.rung_weight(mode_to_rung(mode, x.num_rungs), dtype)
         return x
     return jax.tree_util.tree_map(
         leaf_fn, nested_params, is_leaf=lambda x: isinstance(x, NestedTensor))
 
 
-def set_tree_mode(nested_params, mode: str):
-    """Stamp the serving ``mode`` on every NestedTensor leaf.
+def set_tree_rung(nested_params, rung: int):
+    """Stamp the serving ``rung`` on every NestedTensor leaf.
 
     O(#leaves) metadata flip - no array touches, no dequantization.  The
     model-side matmul dispatch reads the stamp to pick the packed stream(s)."""
+    return jax.tree_util.tree_map(
+        lambda x: x.with_rung(rung) if isinstance(x, NestedTensor) else x,
+        nested_params, is_leaf=lambda x: isinstance(x, NestedTensor))
+
+
+def set_tree_mode(nested_params, mode: str):
+    """Two-level-era alias of :func:`set_tree_rung` ('full' | 'part')."""
     return jax.tree_util.tree_map(
         lambda x: x.with_mode(mode) if isinstance(x, NestedTensor) else x,
         nested_params, is_leaf=lambda x: isinstance(x, NestedTensor))
 
 
+def tree_num_rungs(nested_params) -> int:
+    """Ladder depth of a nested pytree (max over NestedTensor leaves; 1
+    when the tree holds no nested leaf)."""
+    depth = 1
+    for leaf in jax.tree_util.tree_leaves(
+            nested_params, is_leaf=lambda x: isinstance(x, NestedTensor)):
+        if isinstance(leaf, NestedTensor):
+            depth = max(depth, leaf.num_rungs)
+    return depth
+
+
 def tree_bytes(nested_params) -> Dict[str, int]:
-    """Byte accounting over a nested pytree (packed sizes + FP leftovers)."""
+    """Byte accounting over a nested pytree (packed sizes + FP leftovers).
+
+    'high' is the always-resident base stream, 'low' every delta stream
+    together (== the single w_low for two-level nesting)."""
     acc = {"high": 0, "low": 0, "scales": 0, "fp": 0}
     for leaf in jax.tree_util.tree_leaves(
             nested_params, is_leaf=lambda x: isinstance(x, NestedTensor)):
@@ -293,4 +468,23 @@ def tree_bytes(nested_params) -> Dict[str, int]:
         elif hasattr(leaf, "nbytes"):
             acc["fp"] += int(leaf.nbytes)
     acc["total"] = sum(acc.values())
+    return acc
+
+
+def tree_ladder_bytes(nested_params) -> Dict[str, Any]:
+    """Per-rung byte accounting: {'base', 'deltas': [bytes(delta_0), ...],
+    'scales', 'fp', 'total'}.  ``deltas[i]`` is exactly what an upgrade
+    from rung i to rung i+1 pages in (the Table-11 ledger, K-rung)."""
+    depth = tree_num_rungs(nested_params)
+    acc = {"base": 0, "deltas": [0] * max(depth - 1, 0), "scales": 0, "fp": 0}
+    for leaf in jax.tree_util.tree_leaves(
+            nested_params, is_leaf=lambda x: isinstance(x, NestedTensor)):
+        if isinstance(leaf, NestedTensor):
+            acc["base"] += leaf.nbytes_base()
+            for i in range(len(leaf.deltas)):
+                acc["deltas"][i] += leaf.nbytes_delta(i)
+            acc["scales"] += leaf.nbytes_scales()
+        elif hasattr(leaf, "nbytes"):
+            acc["fp"] += int(leaf.nbytes)
+    acc["total"] = acc["base"] + sum(acc["deltas"]) + acc["scales"] + acc["fp"]
     return acc

@@ -1,27 +1,34 @@
-"""On-device model switching runtime (paper Sec. 3.3, Table 11).
+"""On-device model switching runtime (paper Sec. 3.3, Table 11),
+generalized to a K-rung ladder state machine (DESIGN.md Sec. 8).
 
 A :class:`NestQuantStore` owns the packed decomposed weights of one model.
 On TPU the paper's memory page-in/page-out maps to HBM residency (see
-DESIGN.md Sec. 3): ``w_high`` is always resident; ``w_low`` is paged in
-from host/storage on upgrade and dropped on downgrade.
+DESIGN.md Sec. 3): the base stream ``w_base`` is always resident; the
+delta streams are paged in from host/storage on upgrade and dropped on
+downgrade, ONE ADJACENT RUNG AT A TIME - moving from rung k to rung k+1
+touches exactly bytes(delta_k), nothing else.
 
-The ledger reproduces the paper's Table 11 accounting:
-  * NestQuant upgrade:    page-in  = bytes(w_low),  page-out = 0
-  * NestQuant downgrade:  page-in  = 0,             page-out = bytes(w_low)
-  * diverse-bitwidths upgrade:   page-in = bytes(INT-n model),
-                                 page-out = bytes(INT-h model)
-  * diverse-bitwidths downgrade: the reverse.
+The ledger generalizes the paper's Table 11 accounting to K rungs:
+  * NestQuant upgrade k->k+1:    page-in  = bytes(delta_k), page-out = 0
+  * NestQuant downgrade k+1->k:  page-in  = 0,  page-out = bytes(delta_k)
+  * diverse-bitwidths switch r->r': page-in = bytes(INT-bits[r'] model),
+                                    page-out = bytes(INT-bits[r] model)
+The paper's two-level nesting is the 2-rung special case ('part' = rung 0,
+'full' = the top rung).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from . import packing
-from .nesting import NestedTensor, materialize, set_tree_mode, tree_bytes
+from .decompose import normalize_bits
+from .nesting import (NestedTensor, check_rung, materialize, mode_to_rung,
+                      rung_to_mode, set_tree_rung, tree_bytes,
+                      tree_ladder_bytes, tree_num_rungs)
 
 
 @dataclass
@@ -29,16 +36,31 @@ class SwitchLedger:
     page_in_bytes: int = 0
     page_out_bytes: int = 0
     switches: int = 0
+    # (from_rung, to_rung, page_in, page_out) per adjacent rung move
+    events: List[Tuple[int, int, int, int]] = field(default_factory=list)
 
-    def record(self, page_in: int, page_out: int):
+    def record(self, page_in: int, page_out: int,
+               from_rung: int = 0, to_rung: int = 0):
         self.page_in_bytes += page_in
         self.page_out_bytes += page_out
         self.switches += 1
+        self.events.append((from_rung, to_rung, page_in, page_out))
 
 
 def diverse_bitwidth_bytes(nested_params, n: int, h: int) -> Dict[str, int]:
     """Storage of the baseline: two separate packed PTQ models (INT-n + INT-h)."""
-    total_n = total_h = 0
+    d = diverse_ladder_bytes(nested_params, (h, n))
+    return {"int_n": d["models"][1], "int_h": d["models"][0],
+            "total": d["total"]}
+
+
+def diverse_ladder_bytes(nested_params, bits: Sequence[int]) -> Dict[str, object]:
+    """Storage of the K-rung baseline: one separate packed PTQ model per
+    bitwidth in ``bits`` (the AdaBits-style model zoo NestQuant replaces).
+
+    Returns {'bits': ascending tuple, 'models': [bytes per bitwidth], 'total'}."""
+    bits = normalize_bits(bits)
+    models = [0] * len(bits)
     for leaf in jax.tree_util.tree_leaves(
             nested_params, is_leaf=lambda x: isinstance(x, NestedTensor)):
         if isinstance(leaf, NestedTensor):
@@ -46,61 +68,120 @@ def diverse_bitwidth_bytes(nested_params, n: int, h: int) -> Dict[str, int]:
             rest = 1
             for d in leaf.shape[:-2] + leaf.shape[-1:]:
                 rest *= d
-            total_n += packing.packed_rows(K, n) * rest * 4
-            total_h += packing.packed_rows(K, h) * rest * 4
-    return {"int_n": total_n, "int_h": total_h, "total": total_n + total_h}
+            for r, b in enumerate(bits):
+                models[r] += packing.packed_rows(K, b) * rest * 4
+    return {"bits": bits, "models": models, "total": sum(models)}
 
 
 @dataclass
 class NestQuantStore:
-    """Holds a nested model + switching state machine."""
+    """Holds a nested model + the rung-switching state machine.
+
+    ``mode`` accepts the two-level-era strings ('part' | 'full'), a
+    'rungK' string, or an int rung index; internally the store tracks the
+    integer ``rung`` (0 = base, num_rungs-1 = full-bit).  ``n``/``h``
+    default to the tree's own ladder extremes (top/base bitwidths); pass
+    them only to pin a different 2-level diverse baseline."""
     nested_params: object
-    n: int
-    h: int
-    mode: str = "part"                     # 'part' | 'full'
+    n: Optional[int] = None
+    h: Optional[int] = None
+    mode: object = "part"                  # initial rung (str or int)
     dtype: object = jnp.bfloat16
     ledger: SwitchLedger = field(default_factory=SwitchLedger)
-    _low_resident: bool = False
+
+    def __post_init__(self):
+        self.num_rungs = tree_num_rungs(self.nested_params)
+        self.rung = mode_to_rung(self.mode, self.num_rungs)
+        self.mode = rung_to_mode(self.rung, self.num_rungs)
+        # the packed tree is immutable: walk it ONCE for byte accounting
+        # (ensure_mode consults these totals on every request batch)
+        self._ladder_bytes = tree_ladder_bytes(self.nested_params)
+        self._bytes = tree_bytes(self.nested_params)
+        bits = [leaf.bits for leaf in jax.tree_util.tree_leaves(
+                    self.nested_params,
+                    is_leaf=lambda x: isinstance(x, NestedTensor))
+                if isinstance(leaf, NestedTensor)]
+        if self.n is None:
+            self.n = max((b[-1] for b in bits), default=8)
+        if self.h is None:
+            self.h = min((b[0] for b in bits), default=4)
 
     # -- byte accounting ------------------------------------------------
     def bytes(self) -> Dict[str, int]:
-        return tree_bytes(self.nested_params)
+        return dict(self._bytes)           # copy: callers may adjust theirs
+
+    def ladder_bytes(self) -> Dict[str, object]:
+        return {**self._ladder_bytes,
+                "deltas": list(self._ladder_bytes["deltas"])}
+
+    def delta_bytes(self, i: int) -> int:
+        """Bytes of delta stream i == the cost of the rung i -> i+1 upgrade."""
+        if not 0 <= i < self.num_rungs - 1:
+            raise ValueError(f"no delta stream {i} on a "
+                             f"{self.num_rungs}-rung ladder")
+        return self._ladder_bytes["deltas"][i]
+
+    def rung_resident_bytes(self, rung: int) -> int:
+        """HBM the store needs WITH rung ``rung`` resident (base + scales +
+        fp leftovers + the first ``rung`` delta streams)."""
+        rung = check_rung(rung, self.num_rungs)
+        b = self._ladder_bytes
+        return (b["base"] + b["scales"] + b["fp"] + sum(b["deltas"][:rung]))
 
     def resident_bytes(self) -> int:
-        b = self.bytes()
-        base = b["high"] + b["scales"] + b["fp"]
-        return base + (b["low"] if self._low_resident else 0)
+        return self.rung_resident_bytes(self.rung)
+
+    def best_rung_for(self, memory_budget_bytes: Optional[int]) -> int:
+        """Highest rung whose resident bytes fit the budget (rung 0 is the
+        floor: the base stream is always resident)."""
+        if memory_budget_bytes is None:
+            return self.num_rungs - 1
+        want = 0
+        for r in range(self.num_rungs):
+            if self.rung_resident_bytes(r) <= memory_budget_bytes:
+                want = r
+        return want
 
     # -- switching -------------------------------------------------------
-    def to_full(self):
-        """Upgrade: page in w_low (zero page-out; paper Table 11)."""
-        if self.mode != "full":
-            self.ledger.record(page_in=self.bytes()["low"], page_out=0)
-            self.mode, self._low_resident = "full", True
+    def to_rung(self, rung: int):
+        """Walk the ladder one adjacent rung at a time, ledgering exactly
+        bytes(delta_k) per step (Table 11, K-rung)."""
+        rung = mode_to_rung(rung, self.num_rungs)
+        while self.rung < rung:
+            self.ledger.record(page_in=self.delta_bytes(self.rung), page_out=0,
+                               from_rung=self.rung, to_rung=self.rung + 1)
+            self.rung += 1
+        while self.rung > rung:
+            self.ledger.record(page_in=0,
+                               page_out=self.delta_bytes(self.rung - 1),
+                               from_rung=self.rung, to_rung=self.rung - 1)
+            self.rung -= 1
+        self.mode = rung_to_mode(self.rung, self.num_rungs)
         return self
 
+    def to_full(self):
+        """Upgrade to the top rung (2-rung: page in w_low, zero page-out)."""
+        return self.to_rung(self.num_rungs - 1)
+
     def to_part(self):
-        """Downgrade: page out w_low (zero page-in)."""
-        if self.mode != "part":
-            self.ledger.record(page_in=0, page_out=self.bytes()["low"])
-            self.mode, self._low_resident = "part", False
-        return self
+        """Downgrade to the base rung (2-rung: page out w_low, zero page-in)."""
+        return self.to_rung(0)
 
     # -- weights for inference -------------------------------------------
     def params(self):
-        """Serving parameters: the PACKED tree, mode-stamped.
+        """Serving parameters: the PACKED tree, rung-stamped.
 
         No dequantization happens here - NestedTensor leaves flow into the
         model as-is and the matmul dispatch (models.layers.packed_linear)
-        streams the packed words directly.  A mode switch is therefore an
-        O(#leaves) metadata flip (plus the ledgered w_low page-in on
-        upgrade), never a whole-tree dequant."""
-        return set_tree_mode(self.nested_params, self.mode)
+        streams the packed words directly.  A rung switch is therefore an
+        O(#leaves) metadata flip (plus the ledgered adjacent-delta page-in
+        on upgrade), never a whole-tree dequant."""
+        return set_tree_rung(self.nested_params, self.rung)
 
     def dense_params(self):
         """Seed-style dense materialization (benchmark baseline / offline
         export only - NOT on the serving path)."""
-        return materialize(self.nested_params, mode=self.mode, dtype=self.dtype)
+        return materialize(self.nested_params, mode=self.rung, dtype=self.dtype)
 
     # -- comparison baseline ----------------------------------------------
     def diverse_baseline(self) -> Dict[str, int]:
@@ -109,8 +190,13 @@ class NestQuantStore:
         d["switch_page_out"] = d["int_h"]  # upgrade: evict INT-h model
         return d
 
+    def diverse_ladder_baseline(self, bits: Sequence[int]) -> Dict[str, object]:
+        """K diverse-bitwidth PTQ models; switch r->r' swaps whole models."""
+        return diverse_ladder_bytes(self.nested_params, bits)
+
     def switch_reduction(self) -> float:
-        """Paper's 'Reduced Overhead' column: 1 - nest/(diverse) for one upgrade."""
+        """Paper's 'Reduced Overhead' column: 1 - nest/(diverse) for one
+        base-to-top upgrade."""
         nest = self.bytes()["low"]
         div = self.diverse_baseline()
         return 1.0 - nest / max(div["switch_page_in"] + div["switch_page_out"], 1)

@@ -149,12 +149,14 @@ def _nested_pspecs(nested_abs, dense_pspecs):
 
     def f(leaf, spec):
         if isinstance(leaf, NestedTensor):
-            nd = leaf.w_high.ndim
+            nd = leaf.w_base.ndim
             out_ax = spec[-1] if len(spec) else None
             packed = P(*([None] * (nd - 1)), out_ax)
-            return NestedTensor(w_high=packed, w_low=packed, scale=packed,
-                                shape=leaf.shape, n=leaf.n, h=leaf.h,
-                                block=leaf.block, mode=leaf.mode)
+            return NestedTensor(w_base=packed,
+                                deltas=tuple(packed for _ in leaf.deltas),
+                                scale=packed, shape=leaf.shape,
+                                bits=leaf.bits, block=leaf.block,
+                                rung=leaf.rung)
         return spec
 
     return jax.tree.map(f, nested_abs, dense_pspecs,

@@ -1,2 +1,2 @@
-from .ops import nested_matmul
+from .ops import ladder_matmul, nested_matmul
 from . import kernel, ops, ref

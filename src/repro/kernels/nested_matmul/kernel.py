@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused dual-stream nested dequant-matmul.
+"""Pallas TPU kernels: fused multi-stream nested dequant-matmuls.
 
 The full-bit serving path of NestQuant: stream the packed h-bit ``w_high``
 tile AND the packed (l+1)-bit ``w_low`` tile HBM->VMEM, recompose the
@@ -8,11 +8,19 @@ from the nested storage with (h + l + 1)/16 of the bf16 weight-read bytes
 and NO dense intermediate in HBM.  Part-bit mode uses kernels/packed_matmul
 on the ``w_high`` stream alone.
 
-Layout contract: both streams are block-packed along K
+:func:`ladder_matmul` generalizes the dual-stream kernel to a K-rung
+nesting ladder (DESIGN.md Sec. 8): it takes the base stream plus HOWEVER
+MANY delta streams are resident at the serving rung, chains the Eq. 6
+recomposition per level in VMEM, and dequantizes by the rung scale.  The
+stream count is static (it is the jit/pallas specialization key), so each
+rung compiles to its own fused kernel; the dual-stream kernel remains the
+hand-tuned 2-stream fast path.
+
+Layout contract: all streams are block-packed along K
 (core.packing.pack_blocked with block = block_k); grid step (i, j, kk)
-sees contiguous word tiles of blocked_rows(block_k, h) and
-blocked_rows(block_k, l+1) rows, unpacked with the shared
-core.packing.unpack_block_words (static shift+mask + concat, VPU-only).
+sees contiguous word tiles of blocked_rows(block_k, width) rows per
+stream, unpacked with the shared core.packing.unpack_block_words (static
+shift+mask + concat, VPU-only).
 """
 from __future__ import annotations
 
@@ -23,7 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ...core.decompose import recompose
+from ...core.decompose import (chain_recompose, delta_bits, normalize_bits,
+                               recompose)
 from ...core.packing import blocked_rows, unpack_block_words
 
 
@@ -78,3 +87,69 @@ def nested_matmul(x, words_high, words_low, scale, *, n: int, h: int, K: int,
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         interpret=interpret,
     )(x, words_high, words_low, scale)
+
+
+# ---------------------------------------------------------------------------
+# K-rung ladder kernel: base + R resident delta streams in one fused pass
+# ---------------------------------------------------------------------------
+def _ladder_kernel(x_ref, *refs, bits, nk, bk):
+    """refs = (*stream_refs, s_ref, o_ref, acc_ref); stream_refs[0] is the
+    packed base tile, stream_refs[1:] the resident delta tiles (ascending)."""
+    n_streams = len(bits)
+    stream_refs = refs[:n_streams]
+    s_ref, o_ref, acc_ref = refs[n_streams:]
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    widths = delta_bits(bits)
+    codes = chain_recompose(                               # Eq. 6 per level
+        unpack_block_words(stream_refs[0][...], bits[0], bk),
+        [unpack_block_words(stream_refs[i][...], widths[i - 1], bk)
+         for i in range(1, n_streams)],
+        bits)
+    w = codes.astype(x_ref.dtype)                          # exact for n<=8
+    acc_ref[...] += jnp.dot(x_ref[...], w,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(kk == nk - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...] * s_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "K", "block_m",
+                                             "block_n", "block_k", "interpret",
+                                             "out_dtype"))
+def ladder_matmul(x, streams, scale, *, bits, K: int,
+                  block_m: int = 128, block_n: int = 128, block_k: int = 512,
+                  interpret: bool = False, out_dtype=None):
+    """x: (M, K); streams: tuple (base, delta_0, ..., delta_{r-1}) of
+    block-packed int32 (rows_i, N); bits: ascending RESIDENT bitwidths
+    (bits[0] = base, one entry per stream); scale: (1, N) f32 - the rung
+    scale s * 2^(n - bits[-1]) for the served rung.  Returns (M, N)."""
+    bits = normalize_bits(bits)
+    assert len(streams) == len(bits), (len(streams), bits)
+    M = x.shape[0]
+    N = streams[0].shape[1]
+    assert K % block_k == 0, (K, block_k)
+    widths = (bits[0],) + delta_bits(bits)
+    rows = [blocked_rows(block_k, w) for w in widths]
+    nk = K // block_k
+    grid = (M // block_m, N // block_n, nk)
+
+    return pl.pallas_call(
+        functools.partial(_ladder_kernel, bits=bits, nk=nk, bk=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            *[pl.BlockSpec((r, block_n), lambda i, j, kk: (kk, j))
+              for r in rows],
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype or x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, *streams, scale)

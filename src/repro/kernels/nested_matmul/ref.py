@@ -1,10 +1,12 @@
-"""Pure-jnp oracle for the dual-stream nested dequant-matmul kernel."""
+"""Pure-jnp oracles for the nested dequant-matmul kernels (dual-stream
+and K-rung ladder)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 from ...core import packing
-from ...core.decompose import recompose
+from ...core.decompose import (chain_recompose, delta_bits, normalize_bits,
+                               recompose)
 
 
 def nested_matmul_ref(x, words_high, words_low, scale, *, n: int, h: int,
@@ -17,4 +19,21 @@ def nested_matmul_ref(x, words_high, words_low, scale, *, n: int, h: int,
     wh = packing.unpack_blocked(words_high, h, K, block_k, axis=0)
     wl = packing.unpack_blocked(words_low, n - h + 1, K, block_k, axis=0)
     w = recompose(wh, wl, n, h).astype(jnp.float32) * scale
+    return jnp.matmul(x.astype(jnp.float32), w).astype(out_dtype or x.dtype)
+
+
+def ladder_matmul_ref(x, streams, scale, *, bits, K: int, block_k: int,
+                      out_dtype=None):
+    """y = x @ (chain-recompose(streams) * scale): the general-case oracle
+    of the ladder kernel.  streams = (base, delta_0, ...), bits ascending
+    RESIDENT bitwidths (one per stream), scale the rung scale."""
+    bits = normalize_bits(bits)
+    assert len(streams) == len(bits), (len(streams), bits)
+    widths = delta_bits(bits)
+    codes = chain_recompose(
+        packing.unpack_blocked(streams[0], bits[0], K, block_k, axis=0),
+        [packing.unpack_blocked(streams[i], widths[i - 1], K, block_k, axis=0)
+         for i in range(1, len(streams))],
+        bits)
+    w = codes.astype(jnp.float32) * scale
     return jnp.matmul(x.astype(jnp.float32), w).astype(out_dtype or x.dtype)

@@ -2,6 +2,10 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
       --requests 16 --budget-schedule full,part,full
+
+  # K-rung ladder: phases may name any rung (rung0..rungK-1 | part | full)
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+      --bits 8,6,4 --budget-schedule full,rung1,part,full
 """
 from __future__ import annotations
 
@@ -14,8 +18,9 @@ import jax
 
 from ..configs import get_config
 from ..core import NestQuantStore, nest_quantize_tree
-from ..models import make_model
+from ..core.nesting import mode_to_rung
 from ..serving import Request, ServeEngine
+from ..models import make_model
 
 
 def main(argv=None):
@@ -24,10 +29,12 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--n", type=int, default=8)
     ap.add_argument("--h", type=int, default=4)
+    ap.add_argument("--bits", default=None,
+                    help="comma ladder bitwidths (e.g. 8,6,4); overrides n/h")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--budget-schedule", default="full,part,full",
-                    help="comma list of full|part phases")
+                    help="comma list of full|part|rungK phases")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -35,22 +42,27 @@ def main(argv=None):
         cfg = cfg.reduced()
     model = make_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    nested = nest_quantize_tree(params, n=args.n, h=args.h)
-    store = NestQuantStore(nested, n=args.n, h=args.h, mode="part",
-                           dtype=jax.numpy.float32)
+    if args.bits:
+        bits = tuple(int(x) for x in args.bits.split(","))
+        nested = nest_quantize_tree(params, bits=bits)
+    else:
+        nested = nest_quantize_tree(params, n=args.n, h=args.h)
+    store = NestQuantStore(nested, mode="part", dtype=jax.numpy.float32)
     engine = ServeEngine(cfg, store, max_batch=args.requests, max_len=64)
 
     b = store.bytes()
-    full_need = sum(b.values()) - b["total"] + 0  # high+low+scales+fp
-    full_need = b["high"] + b["low"] + b["scales"] + b["fp"]
-    part_need = full_need - b["low"]
+    need = [store.rung_resident_bytes(r) for r in range(store.num_rungs)]
     print(f"[store] high={b['high']/1e6:.2f}MB low={b['low']/1e6:.2f}MB "
-          f"scales={b['scales']/1e6:.2f}MB fp={b['fp']/1e6:.2f}MB")
+          f"scales={b['scales']/1e6:.2f}MB fp={b['fp']/1e6:.2f}MB; "
+          f"resident/rung " +
+          ",".join(f"{x/1e6:.2f}MB" for x in need))
 
     rng = np.random.default_rng(0)
     uid = 0
     for phase in args.budget_schedule.split(","):
-        budget = full_need * 2 if phase == "full" else part_need
+        # budget that admits exactly the requested rung (and nothing above)
+        rung = mode_to_rung(phase, store.num_rungs)
+        budget = need[-1] * 2 if rung == store.num_rungs - 1 else need[rung]
         reqs = []
         for _ in range(args.requests):
             reqs.append(Request(uid, rng.integers(
@@ -60,7 +72,7 @@ def main(argv=None):
         t0 = time.time()
         engine.generate(reqs, memory_budget_bytes=int(budget))
         dt = time.time() - t0
-        print(f"[phase {phase}] mode={store.mode} "
+        print(f"[phase {phase}] mode={store.mode} (rung {store.rung}) "
               f"{args.requests} reqs x {args.new_tokens} tokens in {dt:.2f}s; "
               f"ledger: in={store.ledger.page_in_bytes/1e6:.2f}MB "
               f"out={store.ledger.page_out_bytes/1e6:.2f}MB "

@@ -33,23 +33,29 @@ def packed_linear(x: jax.Array, nt: NestedTensor, out_dtype=None) -> jax.Array:
     """Matmul straight from the packed NestQuant words - the serving path
     never materializes a dense weight.
 
-    Full-bit mode streams BOTH packed words through the fused dual-stream
-    kernel (kernels/nested_matmul); part-bit mode streams ``w_high`` alone
-    through kernels/packed_matmul with the inflated scale s*2^l (Eq. 10).
-    Pallas on TPU, jnp reference on CPU (same storage, same numbers).
-    Leaves with stacked leading dims (e.g. MoE experts) fall back to
-    on-the-fly dequant inside the jit - still no host-side materialize."""
-    if nt.w_high.ndim != 2:
+    Dispatch by the stamped serving ``rung``: the base rung streams
+    ``w_base`` alone through kernels/packed_matmul with the inflated scale
+    s*2^(n-h) (Eq. 10); one resident delta takes the fused dual-stream
+    kernel (kernels/nested_matmul, the 2-stream fast path); deeper rungs
+    take the general K-stream ladder kernel (DESIGN.md Sec. 8).  Pallas on
+    TPU, jnp reference on CPU (same storage, same numbers).  Leaves with
+    stacked leading dims (e.g. MoE experts) fall back to on-the-fly
+    dequant inside the jit - still no host-side materialize."""
+    if nt.w_base.ndim != 2:
         return pdot(x, nt.dequant(x.dtype), preferred=out_dtype)
-    if nt.mode == "part":
-        return packed_ops.packed_matmul(x, nt.w_high,
-                                        nt.part_scale.reshape(1, -1),
-                                        k=nt.h, K=nt.K, block_k=nt.block,
+    r = nt.rung
+    rung_scale = nt.rung_scale(r).reshape(1, -1)
+    if r == 0:
+        return packed_ops.packed_matmul(x, nt.w_base, rung_scale,
+                                        k=nt.bits[0], K=nt.K, block_k=nt.block,
                                         out_dtype=out_dtype)
-    return nested_ops.nested_matmul(x, nt.w_high, nt.w_low,
-                                    nt.scale.reshape(1, -1),
-                                    n=nt.n, h=nt.h, K=nt.K, block_k=nt.block,
-                                    out_dtype=out_dtype)
+    if r == 1:
+        return nested_ops.nested_matmul(x, nt.w_base, nt.deltas[0], rung_scale,
+                                        n=nt.bits[1], h=nt.bits[0], K=nt.K,
+                                        block_k=nt.block, out_dtype=out_dtype)
+    return nested_ops.ladder_matmul(x, (nt.w_base,) + nt.deltas[:r],
+                                    rung_scale, bits=nt.bits[:r + 1], K=nt.K,
+                                    block_k=nt.block, out_dtype=out_dtype)
 
 
 def linear(x: jax.Array, w, b=None) -> jax.Array:

@@ -1,11 +1,12 @@
 """Serving engine: batched requests, prefill/decode, NestQuant switching.
 
-The engine owns (a) a :class:`NestQuantStore` (packed weights + switching
+The engine owns (a) a :class:`NestQuantStore` (packed weights + rung
 state machine) and (b) the jitted prefill/decode steps.  A memory-budget
-signal drives full-bit <-> part-bit switching at request boundaries - the
-paper's IoT page-in/page-out story mapped to accelerator-HBM residency
-(DESIGN.md Sec. 3): downgrading frees bytes(w_low) of HBM immediately and
-costs nothing to transport; upgrading pages w_low back in.
+signal drives ladder-rung switching at request boundaries - the paper's
+IoT page-in/page-out story mapped to accelerator-HBM residency
+(DESIGN.md Sec. 3): the engine serves the highest rung fitting the
+budget, and every adjacent rung move pages exactly one delta stream
+(DESIGN.md Sec. 8); the paper's full/part pair is the 2-rung case.
 """
 from __future__ import annotations
 
@@ -54,25 +55,20 @@ class ServeEngine:
 
     # -- switching ---------------------------------------------------------
     def ensure_mode(self, memory_budget_bytes: Optional[int] = None):
-        """Pick full/part-bit from the HBM budget and flip residency.
+        """Pick the HIGHEST ladder rung fitting the HBM budget and flip
+        residency (rung 0 = the always-resident base, the top rung = the
+        full-bit model; the paper's full/part pair is the 2-rung case).
 
         The serving path never materializes dense weights: ``store.params()``
-        is the packed tree with the mode stamped on each leaf, so a switch
-        is an O(1)-per-leaf metadata flip plus the ledgered w_low page-in
-        (upgrade) / page-out (downgrade).  ``stats.switches`` counts only
-        REAL mode changes - first-time parameter pickup is not a switch."""
-        want = "full"
-        if memory_budget_bytes is not None:
-            b = self.store.bytes()
-            full_need = b["high"] + b["low"] + b["scales"] + b["fp"]
-            if full_need > memory_budget_bytes:
-                want = "part"
-        changed = want != self.store.mode
+        is the packed tree with the rung stamped on each leaf, so a switch
+        is an O(1)-per-leaf metadata flip plus the ledgered adjacent-delta
+        page-ins (upgrade) / page-outs (downgrade).  ``stats.switches``
+        counts only REAL rung changes - first-time parameter pickup is not
+        a switch."""
+        want = self.store.best_rung_for(memory_budget_bytes)
+        changed = want != self.store.rung
         if changed:
-            if want == "full":
-                self.store.to_full()
-            else:
-                self.store.to_part()
+            self.store.to_rung(want)
             self.stats.switches += 1
         if changed or self._params is None:
             self._params = self.store.params()

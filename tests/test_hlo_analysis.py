@@ -89,7 +89,12 @@ def test_end_to_end_scan_flops_corrected():
     expect = 2 * D * D * D * L
     assert costs.flops == pytest.approx(expect, rel=0.01), \
         (costs.flops, expect)
-    xla = compiled.cost_analysis().get("flops", 0)
+    # cost_analysis() returned a one-element list of dicts on older jax
+    # and returns the dict directly on newer releases - accept both.
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    xla = ca.get("flops", 0)
     assert xla < expect / 2            # documents the undercount we correct
 
 

@@ -1,0 +1,254 @@
+"""K-rung nesting-ladder tests (DESIGN.md Sec. 8).
+
+Exactness: every rung chain must recompose the INT-n codes EXACTLY at
+every level (the paper's 1-bit compensation applied per level).  Ledger:
+an upgrade from rung k to k+1 pages in only bytes(delta_k).  Serving: the
+engine picks the highest rung fitting the HBM budget from packed words.
+"""
+import itertools
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (NestQuantStore, chain_decompose, chain_recompose,
+                        delta_bits, int_range, nest_quantize,
+                        nest_quantize_tree, normalize_bits, tree_ladder_bytes)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:          # property tests need requirements-dev.txt
+    HAS_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# chain decompose/recompose exactness (exhaustive over codes and chains)
+# ---------------------------------------------------------------------------
+def _all_chains(n, max_len=4):
+    """Every descending rung chain starting at n with rungs in [2, n)."""
+    lowers = range(2, n)
+    for r in range(1, max_len):
+        for combo in itertools.combinations(lowers, r):
+            yield (n,) + tuple(sorted(combo, reverse=True))
+
+
+@pytest.mark.parametrize("method", ["bitshift", "rtn", "adaptive"])
+@pytest.mark.parametrize("n", [8, 6])
+def test_every_chain_recomposes_exactly_at_every_rung(method, n):
+    """ALL signed INT-n codes through ALL <=4-rung chains: climbing from
+    the base with the compensated deltas must land exactly on the codes
+    the downward split produced at that rung, and the top must equal the
+    original w_int."""
+    lo, hi = int_range(n)
+    codes = jnp.arange(lo, hi + 1, dtype=jnp.int32).reshape(1, -1).T
+    for chain in _all_chains(n):
+        bits = normalize_bits(chain)
+        base, deltas = chain_decompose(codes, bits, method=method)
+        # delta widths respect the per-level (gap+1)-bit storage contract
+        for i, d in enumerate(deltas):
+            dlo, dhi = int_range(delta_bits(bits)[i])
+            assert int(d.min()) >= dlo and int(d.max()) <= dhi, (bits, i)
+        # climbing to the top restores w_int exactly
+        top = chain_recompose(base, deltas, bits)
+        np.testing.assert_array_equal(np.asarray(top), np.asarray(codes),
+                                      err_msg=f"chain {bits} method {method}")
+        # every intermediate rung stays inside its own integer range
+        for r in range(len(bits)):
+            cur = chain_recompose(base, deltas, bits, rung=r)
+            rlo, rhi = int_range(bits[r])
+            assert int(cur.min()) >= rlo and int(cur.max()) <= rhi, (bits, r)
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(data=st.data())
+    def test_random_chain_roundtrips_random_weights(data):
+        n = data.draw(st.sampled_from([8, 6, 5]), label="n")
+        lowers = data.draw(
+            st.sets(st.integers(2, n - 1), min_size=1, max_size=3),
+            label="lowers")
+        bits = tuple(sorted(lowers)) + (n,)
+        method = data.draw(st.sampled_from(["bitshift", "rtn", "adaptive"]),
+                           label="method")
+        lo, hi = int_range(n)
+        rows = data.draw(st.integers(1, 5), label="rows")
+        w = data.draw(
+            st.lists(st.lists(st.integers(lo, hi), min_size=4, max_size=4),
+                     min_size=rows, max_size=rows), label="w")
+        codes = jnp.asarray(np.array(w, np.int32))
+        base, deltas = chain_decompose(codes, bits, method=method)
+        top = chain_recompose(base, deltas, bits)
+        np.testing.assert_array_equal(np.asarray(top), np.asarray(codes))
+else:
+    @pytest.mark.skip(reason="property tests need hypothesis "
+                      "(pip install -r requirements-dev.txt)")
+    def test_random_chain_roundtrips_random_weights():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# NestedTensor ladders
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def w():
+    return jax.random.normal(jax.random.PRNGKey(0), (256, 128), jnp.float32)
+
+
+def test_ladder_top_codes_independent_of_chain(w):
+    """Step 1 (INT-n quantization) is chain-independent, so EVERY ladder
+    with the same top bitwidth must recompose the SAME full-bit codes."""
+    ref = nest_quantize(w, n=8, h=4)
+    for bits in ((8, 6, 4), (8, 5, 3), (8, 7, 6, 4), (8, 6, 5, 4, 3)):
+        nt = nest_quantize(w, bits=bits)
+        assert nt.num_rungs == len(bits)
+        np.testing.assert_array_equal(np.asarray(nt.codes_full()),
+                                      np.asarray(ref.codes_full()),
+                                      err_msg=f"bits {bits}")
+
+
+def test_ladder_rung_codes_in_range_and_dequant_scales(w):
+    nt = nest_quantize(w, bits=(8, 6, 4))
+    for r in range(3):
+        lo, hi = int_range(nt.bits[r])
+        c = nt.codes_at(r)
+        assert int(c.min()) >= lo and int(c.max()) <= hi
+        # rung scale = s * 2^(n - b_r): dequantized rungs share magnitude
+        got = np.asarray(nt.rung_weight(r, jnp.float32))
+        want = np.asarray(c) * np.asarray(nt.rung_scale(r))
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_ladder_pytree_and_rung_stamp_roundtrip(w):
+    nt = nest_quantize(w, bits=(8, 6, 4))
+    leaves, treedef = jax.tree_util.tree_flatten(nt)
+    nt2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert nt2.bits == nt.bits and nt2.rung == nt.rung
+    assert nt.with_rung(0).mode == "part"
+    assert nt.with_rung(2).mode == "full"
+    assert nt.with_rung(1).mode == "rung1"
+    assert nt.with_mode("part").rung == 0 and nt.with_mode("full").rung == 2
+
+
+def test_ladder_gather_rows_matches_dense_at_every_rung(w):
+    nt = nest_quantize(w, bits=(8, 6, 4), block=64)
+    idx = jnp.asarray([0, 3, 77, 255, 128])
+    for r in range(3):
+        m = nt.with_rung(r)
+        got = np.asarray(m.gather_rows(idx, jnp.float32))
+        want = np.asarray(m.dequant(jnp.float32))[np.asarray(idx)]
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_ladder_matmul_kernel_matches_ref(w):
+    from repro.kernels.nested_matmul import kernel as nm_kernel
+    from repro.kernels.nested_matmul import ref as nm_ref
+
+    nt = nest_quantize(w, bits=(8, 6, 4), block=256)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 256), jnp.float32)
+    streams = (nt.w_base,) + nt.deltas
+    scale = nt.scale.reshape(1, -1)
+    y_ref = nm_ref.ladder_matmul_ref(x, streams, scale, bits=nt.bits,
+                                     K=256, block_k=256)
+    y_ker = nm_kernel.ladder_matmul(x, streams, scale, bits=nt.bits, K=256,
+                                    block_m=8, block_n=128, block_k=256,
+                                    interpret=True)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    dense = x @ nt.full_bit(jnp.float32)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(dense),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# rung state machine + ledger (Table 11, K-rung)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def ladder_store():
+    params = {"a": jax.random.normal(jax.random.PRNGKey(0), (256, 128)),
+              "b": jax.random.normal(jax.random.PRNGKey(1), (128, 128))}
+    nested = nest_quantize_tree(params, bits=(8, 6, 4))
+    return nested, NestQuantStore(nested, mode="part")   # n/h derived
+
+
+def test_upgrade_pages_in_only_the_adjacent_delta(ladder_store):
+    nested, _ = ladder_store
+    store = NestQuantStore(nested, n=8, h=4, mode="part")
+    lb = tree_ladder_bytes(nested)
+    assert lb["base"] > 0 and all(d > 0 for d in lb["deltas"])
+    # rung 0 -> 1: exactly bytes(delta_0), nothing paged out
+    store.to_rung(1)
+    assert store.ledger.page_in_bytes == lb["deltas"][0]
+    assert store.ledger.page_out_bytes == 0
+    assert store.ledger.events == [(0, 1, lb["deltas"][0], 0)]
+    # rung 1 -> 2: exactly bytes(delta_1) more
+    store.to_rung(2)
+    assert store.ledger.page_in_bytes == lb["deltas"][0] + lb["deltas"][1]
+    assert store.ledger.events[-1] == (1, 2, lb["deltas"][1], 0)
+    # downgrade 2 -> 0 pages out both deltas, one adjacent step at a time
+    store.to_part()
+    assert store.ledger.page_out_bytes == lb["deltas"][0] + lb["deltas"][1]
+    assert [e[:2] for e in store.ledger.events] == \
+        [(0, 1), (1, 2), (2, 1), (1, 0)]
+
+
+def test_resident_bytes_and_best_rung(ladder_store):
+    nested, store = ladder_store
+    lb = tree_ladder_bytes(nested)
+    need = [store.rung_resident_bytes(r) for r in range(3)]
+    assert need[0] == lb["base"] + lb["scales"] + lb["fp"]
+    assert need[1] == need[0] + lb["deltas"][0]
+    assert need[2] == need[1] + lb["deltas"][1]
+    assert store.best_rung_for(None) == 2
+    assert store.best_rung_for(need[2]) == 2
+    assert store.best_rung_for(need[2] - 1) == 1
+    assert store.best_rung_for(need[1]) == 1
+    assert store.best_rung_for(need[0]) == 0
+    assert store.best_rung_for(0) == 0        # base is the floor
+
+
+def test_two_level_ledger_semantics_unchanged(ladder_store):
+    """The paper's 2-rung accounting is the special case: to_full pages in
+    bytes(w_low) with zero page-out."""
+    params = {"a": jax.random.normal(jax.random.PRNGKey(2), (256, 128))}
+    nested = nest_quantize_tree(params, n=8, h=4)
+    store = NestQuantStore(nested, n=8, h=4, mode="part")
+    b = store.bytes()
+    store.to_full()
+    assert store.ledger.page_in_bytes == b["low"]
+    assert store.ledger.page_out_bytes == 0
+    assert store.mode == "full" and store.rung == 1
+
+
+# ---------------------------------------------------------------------------
+# serving: budget sweep picks rungs from packed words
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_engine_budget_sweep_selects_every_rung():
+    from repro.configs import get_config
+    from repro.models import make_model
+    from repro.serving import Request, ServeEngine
+
+    cfg = get_config("qwen2-1.5b").reduced()
+    model = make_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    nested = nest_quantize_tree(params, bits=(8, 6, 4))
+    store = NestQuantStore(nested, mode="part", dtype=jnp.float32)
+    eng = ServeEngine(cfg, store, max_batch=2, max_len=32)
+    need = [store.rung_resident_bytes(r) for r in range(3)]
+
+    rng = np.random.default_rng(0)
+    mk = lambda: [Request(i, rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                          max_new_tokens=2) for i in range(2)]
+    seen = []
+    for budget in (None, need[0], need[1], None):
+        reqs = eng.generate(mk(), memory_budget_bytes=budget)
+        assert all(len(r.out_tokens) == 2 for r in reqs)
+        seen.append(store.rung)
+    assert seen == [2, 0, 1, 2]
+    # ledger totals: down 2 deltas, up 1, up 1 == in 3 deltas' worth total
+    lb = store.ladder_bytes()
+    assert store.ledger.page_out_bytes == sum(lb["deltas"])
+    assert store.ledger.page_in_bytes == 2 * sum(lb["deltas"])
+    assert eng.stats.mode_history == ["full", "part", "rung1", "full"]
