@@ -77,6 +77,27 @@ def run():
                  f"reduction={red:.3f};ideal={ladder_ideal(bits):.3f}")
             assert red > 0.2        # the deeper the ladder, the bigger the win
 
+    # per-layer recipe: attention carries the deep (8,6,4) ladder, the MLP
+    # only (8,4) - the artifact lands between the two uniform ladders
+    # (DESIGN.md Sec. 9)
+    from repro.api import LayerOverride, QuantRecipe, quantize
+
+    def nest_total_of(tree) -> int:
+        b = tree_ladder_bytes(tree)
+        return b["base"] + sum(b["deltas"])
+
+    cfg = ARCHS["qwen2-1.5b"].reduced()
+    params = make_model(cfg).init(rng)
+    recipe = QuantRecipe(bits=(8, 4), overrides=(
+        LayerOverride(pattern=r"\['(q|k|v|o)'\]", bits=(8, 6, 4)),))
+    mixed = nest_total_of(quantize(params, recipe))
+    shallow = nest_total_of(nest_quantize_tree(params, bits=(8, 4)))
+    deep = nest_total_of(nest_quantize_tree(params, bits=(8, 6, 4)))
+    emit("recipe_storage_qwen2-1.5b_attn864_mlp84", 0.0,
+         f"mixed_MB={mixed/1e6:.3f};uniform84_MB={shallow/1e6:.3f};"
+         f"uniform864_MB={deep/1e6:.3f}")
+    assert shallow <= mixed <= deep
+
 
 if __name__ == "__main__":
     run()

@@ -136,6 +136,60 @@ def run():
     emit("switch_latency_e2e_warm", min(e2e) * 1e6,
          "mode flip + 1-token generate, jit caches warm (steady state)")
 
+    # -- per-layer ladders + rung policies (DESIGN.md Sec. 9) ---------------
+    # A declarative recipe gives attention a deeper (8,6,4) ladder than the
+    # MLP's (8,4); a mixed RungAssignment then pages ONLY the attention
+    # deltas, and the ledger total must equal the per-leaf sum exactly.
+    from repro.api import (BudgetPolicy, HysteresisPolicy, LayerOverride,
+                           QualityFloorPolicy, QuantRecipe, RungAssignment,
+                           quantize, simulate_policy)
+    import re
+    cfg = ARCHS["qwen2-1.5b"].reduced()
+    params = make_model(cfg).init(rng)
+    ATTN = r"\['(q|k|v|o)'\]"            # qwen2 attention projections
+    recipe = QuantRecipe(bits=(8, 4), overrides=(
+        LayerOverride(pattern=ATTN, bits=(8, 6, 4)),))
+    nested = quantize(params, recipe)
+    store = NestQuantStore(nested, mode="part")
+    attn_deltas = sum(sum(leaf.stream_nbytes()[1:])
+                      for path, leaf in store.nested_leaves()
+                      if re.search(ATTN, path))
+    assert attn_deltas > 0
+    base_resident = store.resident_bytes()
+    rep = store.apply(RungAssignment(default=0, overrides=((ATTN, -1),)))
+    assert rep["page_in"] == attn_deltas and rep["page_out"] == 0
+    emit("recipe_mixed_attn_full_mlp_base", 0.0,
+         f"page_in_MB={rep['page_in']/1e6:.3f};page_out=0;"
+         f"moves={rep['moves']};mode={store.mode};"
+         f"resident_MB={store.resident_bytes()/1e6:.3f};"
+         f"uniform_full_MB={store.rung_resident_bytes(store.num_rungs-1)/1e6:.3f}")
+    rep = store.apply(RungAssignment(default=0))        # back down
+    assert rep["page_out"] == attn_deltas and not store.is_mixed
+    assert store.resident_bytes() == base_resident
+
+    # oscillating budget: switch counts + page bytes per policy.  The raw
+    # budget policy thrashes; hysteresis holds through the blips (strictly
+    # fewer switches, asserted); the quality floor refuses rungs whose
+    # SQNR vs the full-bit weights is below 20 dB.
+    need = [store.rung_resident_bytes(r) for r in range(store.num_rungs)]
+    osc = [need[-1] * 2, need[0], need[-1] * 2, need[0],
+           need[-1] * 2, need[0], need[-1] * 2, need[-1] * 2,
+           need[-1] * 2, need[-1] * 2]
+    results = {}
+    for name, policy in (("budget", BudgetPolicy()),
+                         ("hysteresis", HysteresisPolicy(dwell=4)),
+                         ("quality_floor", QualityFloorPolicy(floor=20.0))):
+        st = NestQuantStore(nested, mode="full")
+        results[name] = r = simulate_policy(policy, st, osc)
+        emit(f"policy_oscillation_{name}", 0.0,
+             f"switches={r['switches']};"
+             f"page_in_MB={r['page_in']/1e6:.3f};"
+             f"page_out_MB={r['page_out']/1e6:.3f};"
+             f"modes={'|'.join(r['modes'])}")
+    assert results["hysteresis"]["switches"] < results["budget"]["switches"]
+    assert (results["hysteresis"]["page_in"] + results["hysteresis"]["page_out"]
+            < results["budget"]["page_in"] + results["budget"]["page_out"])
+
 
 if __name__ == "__main__":
     run()

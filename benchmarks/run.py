@@ -1,13 +1,16 @@
 """Benchmark aggregator: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (see each module's docstring
-for the paper table it reproduces).
+for the paper table it reproduces).  ``--json out.json`` additionally
+dumps the rows as JSON (CI uploads BENCH_switching.json so the perf
+trajectory is tracked per commit).
 
-  PYTHONPATH=src python -m benchmarks.run [--only substring]
+  PYTHONPATH=src python -m benchmarks.run [--only substring] [--json out.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -15,6 +18,8 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="out.json",
+                    help="also write the emitted rows as JSON")
     args = ap.parse_args()
 
     from . import (bench_cliff, bench_kernels, bench_nesting_quality,
@@ -41,6 +46,12 @@ def main() -> None:
             failures.append((name, e))
             traceback.print_exc()
             print(f"{name},0.00,FAILED:{type(e).__name__}")
+    if args.json:
+        from .common import ROWS
+        with open(args.json, "w") as f:
+            json.dump([{"name": n, "us_per_call": us, "derived": d}
+                       for (n, us, d) in ROWS], f, indent=2)
+        print(f"wrote {len(ROWS)} rows to {args.json}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -5,9 +5,10 @@
 import jax
 import jax.numpy as jnp
 
+from repro.api import QuantRecipe, quantize
 from repro.configs import get_config
 from repro.core import (NestQuantStore, critical_nested_bits, materialize,
-                        nest_quantize_tree, sqnr_db, tree_bytes)
+                        sqnr_db, tree_bytes)
 from repro.models import make_model
 
 
@@ -22,8 +23,9 @@ def main():
     h = critical_nested_bits(size_mb, n=8)
     print(f"model {size_mb:.1f} MB fp32 -> INT(8|{h}) nesting")
 
-    # 3. run Algorithm 1 over the whole parameter tree
-    nested = nest_quantize_tree(params, n=8, h=h)
+    # 3. run Algorithm 1 over the whole parameter tree (declarative
+    # recipe; per-layer overrides come in step 7)
+    nested = quantize(params, QuantRecipe(bits=(h, 8)))
     b = tree_bytes(nested)
     print(f"packed: high={b['high']/1e6:.2f}MB low={b['low']/1e6:.2f}MB "
           f"scales={b['scales']/1e6:.3f}MB fp-kept={b['fp']/1e6:.2f}MB")
@@ -50,7 +52,7 @@ def main():
     # 6. beyond the paper: a K-rung ladder (INT8 > INT6 > INT4) stores one
     # base plus one compensated delta per level; each rung recomposes its
     # codes exactly, and every adjacent move pages one delta stream
-    ladder = nest_quantize_tree(params, bits=(8, 6, 4))
+    ladder = quantize(params, QuantRecipe(bits=(8, 6, 4)))
     store3 = NestQuantStore(ladder, mode="part")
     lb = store3.ladder_bytes()
     print(f"ladder 8>6>4: base={lb['base']/1e6:.2f}MB + deltas "
@@ -58,6 +60,25 @@ def main():
     store3.to_full()                       # climbs 4 -> 6 -> 8
     for (r_from, r_to, pin, _) in store3.ledger.events:
         print(f"  rung {r_from} -> {r_to}: paged in {pin/1e6:.2f}MB")
+
+    # 7. declarative recipes + rung policies (DESIGN.md Sec. 9): per-layer
+    # ladders from one spec - attention gets 8>6>4, the MLP keeps 8>4 -
+    # and a dwell-window policy that kills switch thrash
+    from repro.api import (BudgetPolicy, HysteresisPolicy, LayerOverride,
+                           simulate_policy)
+    recipe = QuantRecipe(bits=(8, 4), overrides=(
+        LayerOverride(pattern=r"\['(q|k|v|o)'\]", bits=(8, 6, 4)),))
+    mixed = quantize(params, recipe)
+    probe = NestQuantStore(mixed, mode="full")
+    need = [probe.rung_resident_bytes(r) for r in range(probe.num_rungs)]
+    osc = [need[-1] * 2, need[0]] * 3 + [need[-1] * 2] * 4  # flapping budget
+    for name, pol in (("budget", BudgetPolicy()),
+                      ("hysteresis", HysteresisPolicy(dwell=4))):
+        st = NestQuantStore(mixed, mode="full")
+        r = simulate_policy(pol, st, osc)
+        print(f"recipe + {name:10s}: {r['switches']} switches, "
+              f"{(r['page_in'] + r['page_out'])/1e6:.2f}MB paged on an "
+              f"oscillating budget")
 
 
 if __name__ == "__main__":

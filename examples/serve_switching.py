@@ -63,7 +63,26 @@ def main():
           f"-{store.switch_reduction():.0%}")
     print(f"engine stats: {engine.stats.prefills} prefills, "
           f"{engine.stats.decode_steps} decode steps, "
-          f"modes {engine.stats.mode_history}")
+          f"modes {list(engine.stats.mode_history)}")
+
+    # -- oscillating budget: HysteresisPolicy vs raw BudgetPolicy ----------
+    # A co-tenant flapping around a rung boundary makes the raw budget
+    # policy thrash (page the same delta in and out every batch); the
+    # hysteresis wrapper downgrades once, holds through the blips, and
+    # upgrades once after the dwell window (DESIGN.md Sec. 9).
+    from repro.api import BudgetPolicy, HysteresisPolicy, simulate_policy
+    osc = [need[-1] * 2, need[0], need[-1] * 2, need[0],
+           need[-1] * 2, need[0], need[-1] * 2, need[-1] * 2,
+           need[-1] * 2, need[-1] * 2, need[-1] * 2]
+    print("\noscillating budget (MB):",
+          [round(x / 1e6, 2) for x in osc])
+    for name, policy in (("budget", BudgetPolicy()),
+                         ("hysteresis", HysteresisPolicy(dwell=4))):
+        st = NestQuantStore(nested, mode="full", dtype=jnp.float32)
+        r = simulate_policy(policy, st, osc)
+        paged = (r["page_in"] + r["page_out"]) / 1e6
+        print(f"  {name:10s}: {r['switches']} switches, "
+              f"{paged:.2f}MB paged, modes {r['modes']}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,33 @@
+"""NestQuant reproduction - public surface in :mod:`repro.api`.
+
+Attributes are loaded lazily (PEP 562) so ``import repro`` stays cheap
+and submodules (``repro.core``, ``repro.kernels``, ...) import without
+pulling the whole serving stack.
+"""
+from __future__ import annotations
+
+from importlib import import_module
+
+_API = (
+    "QuantRecipe", "LayerOverride", "LeafSpec", "quantize", "recipe_summary",
+    "NestedTensor", "nest_quantize", "nest_quantize_tree", "materialize",
+    "set_tree_rung", "critical_nested_bits",
+    "NestQuantStore", "RungAssignment", "SwitchLedger",
+    "diverse_ladder_bytes",
+    "RungPolicy", "BudgetPolicy", "HysteresisPolicy", "QualityFloorPolicy",
+    "ResourceSignal", "SignalTracker", "POLICIES", "make_policy",
+    "simulate_policy",
+    "ServeEngine", "Request", "EngineStats",
+    "ARCHS", "get_config", "make_model",
+)
+__all__ = list(_API)
+
+
+def __getattr__(name: str):
+    if name in _API:
+        return getattr(import_module("repro.api"), name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_API))

@@ -1,0 +1,53 @@
+"""The declarative public API (DESIGN.md Sec. 9).
+
+One import gives the whole quantize -> store -> serve surface::
+
+    from repro.api import (QuantRecipe, LayerOverride, quantize,
+                           NestQuantStore, ServeEngine, HysteresisPolicy)
+
+    recipe = QuantRecipe(bits=(8, 4), overrides=(
+        LayerOverride(pattern=r"attn", bits=(8, 6, 4)),   # deeper ladder
+        LayerOverride(pattern=r"embed", dense=True),       # keep dense
+    ))
+    nested = quantize(params, recipe)
+    store = NestQuantStore(nested, mode="part")
+    engine = ServeEngine(cfg, store, policy=HysteresisPolicy(dwell=4))
+    engine.generate(requests, memory_budget_bytes=budget)
+
+Everything here is re-exported from the package root (``import repro;
+repro.quantize``); submodule imports keep working for code that wants
+the internals.
+"""
+from __future__ import annotations
+
+from .configs import ARCHS, get_config
+from .core.nesting import (NestedTensor, critical_nested_bits, materialize,
+                           nest_quantize, nest_quantize_tree, set_tree_rung)
+from .core.recipe import (LayerOverride, LeafSpec, QuantRecipe, quantize,
+                          recipe_summary)
+from .core.switching import (NestQuantStore, RungAssignment, SwitchLedger,
+                             diverse_ladder_bytes)
+from .models import make_model
+from .serving.engine import EngineStats, Request, ServeEngine
+from .serving.policies import (POLICIES, BudgetPolicy, HysteresisPolicy,
+                               QualityFloorPolicy, ResourceSignal, RungPolicy,
+                               SignalTracker, make_policy, simulate_policy)
+
+__all__ = [
+    # recipes
+    "QuantRecipe", "LayerOverride", "LeafSpec", "quantize", "recipe_summary",
+    # quantization core
+    "NestedTensor", "nest_quantize", "nest_quantize_tree", "materialize",
+    "set_tree_rung", "critical_nested_bits",
+    # switching store
+    "NestQuantStore", "RungAssignment", "SwitchLedger",
+    "diverse_ladder_bytes",
+    # policies
+    "RungPolicy", "BudgetPolicy", "HysteresisPolicy", "QualityFloorPolicy",
+    "ResourceSignal", "SignalTracker", "POLICIES", "make_policy",
+    "simulate_policy",
+    # serving
+    "ServeEngine", "Request", "EngineStats",
+    # models/configs
+    "ARCHS", "get_config", "make_model",
+]

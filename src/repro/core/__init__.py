@@ -12,5 +12,7 @@ from .nesting import (NestedTensor, nest_quantize, nest_quantize_tree,
                       materialize, set_tree_mode, set_tree_rung, tree_bytes,
                       tree_ladder_bytes, tree_num_rungs, critical_nested_bits,
                       default_predicate, mode_to_rung, rung_to_mode)
-from .switching import (NestQuantStore, SwitchLedger, diverse_bitwidth_bytes,
-                        diverse_ladder_bytes)
+from .switching import (NestQuantStore, RungAssignment, SwitchLedger,
+                        diverse_bitwidth_bytes, diverse_ladder_bytes)
+from .recipe import (LayerOverride, LeafSpec, QuantRecipe, quantize,
+                     recipe_summary)

@@ -386,11 +386,23 @@ def nest_quantize_tree(params, n: int = 8, h: Optional[int] = None,
                        bits: Optional[Sequence[int]] = None):
     """Apply Algorithm 1 across a parameter pytree.
 
-    Returns a pytree of the same structure where nested leaves are
-    ``NestedTensor`` and the rest are unchanged.  ``bits`` selects a
-    K-rung ladder (e.g. ``(8, 6, 4)``); otherwise ``h=None`` selects the
-    critical nested combination per-model via Eq. 12 (model size in MB).
+    DEPRECATED keyword-soup shim: build a declarative
+    :class:`repro.core.recipe.QuantRecipe` and call
+    ``repro.api.quantize(params, recipe)`` instead - recipes add ordered
+    per-layer overrides (different ladders for attention vs MLP, dense
+    embeddings, ...) that this entry point cannot express.
+
+    ``bits`` selects a K-rung ladder (e.g. ``(8, 6, 4)``); otherwise
+    ``h=None`` selects the critical nested combination per-model via
+    Eq. 12 (model size in MB).
     """
+    import warnings
+
+    from .recipe import QuantRecipe, quantize
+    warnings.warn(
+        "nest_quantize_tree is a compatibility shim; prefer "
+        "repro.api.quantize(params, QuantRecipe(...)) (DESIGN.md Sec. 9)",
+        DeprecationWarning, stacklevel=2)
     if bits is None:
         if h is None:
             size_mb = sum(
@@ -399,18 +411,10 @@ def nest_quantize_tree(params, n: int = 8, h: Optional[int] = None,
             )
             h = critical_nested_bits(size_mb, n)
         bits = (h, n)
-    bits = normalize_bits(bits)
-
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
-    out = []
-    for path, leaf in flat:
-        key = jax.tree_util.keystr(path)
-        if predicate(key, leaf):
-            out.append(nest_quantize(leaf, rounding=rounding, bits=bits,
-                                     group_size=group_size, block=block))
-        else:
-            out.append(leaf)
-    return jax.tree_util.tree_unflatten(treedef, out)
+    recipe = QuantRecipe(bits=normalize_bits(bits), rounding=rounding,
+                         block=block, group_size=group_size,
+                         predicate=predicate)
+    return quantize(params, recipe)
 
 
 def materialize(nested_params, mode: str = "full", dtype=jnp.bfloat16):
@@ -425,14 +429,35 @@ def materialize(nested_params, mode: str = "full", dtype=jnp.bfloat16):
         leaf_fn, nested_params, is_leaf=lambda x: isinstance(x, NestedTensor))
 
 
-def set_tree_rung(nested_params, rung: int):
-    """Stamp the serving ``rung`` on every NestedTensor leaf.
+def set_tree_rung(nested_params, rung):
+    """Stamp the serving rung on every NestedTensor leaf.
 
+    ``rung`` is either an int (uniform stamp, clamped to each leaf's own
+    ladder top - per-layer recipes yield trees whose leaves have
+    different depths) or a mapping ``{keystr path: rung}`` for per-leaf
+    assignments (DESIGN.md Sec. 9); unmapped leaves keep their stamp.
     O(#leaves) metadata flip - no array touches, no dequantization.  The
-    model-side matmul dispatch reads the stamp to pick the packed stream(s)."""
-    return jax.tree_util.tree_map(
-        lambda x: x.with_rung(rung) if isinstance(x, NestedTensor) else x,
+    model-side matmul dispatch reads the stamp to pick the packed
+    stream(s)."""
+    if isinstance(rung, int):
+        r = check_rung(rung, tree_num_rungs(nested_params))
+        return jax.tree_util.tree_map(
+            lambda x: (x.with_rung(min(r, x.top))
+                       if isinstance(x, NestedTensor) else x),
+            nested_params, is_leaf=lambda x: isinstance(x, NestedTensor))
+    # map form: same contract as the int form - validate against the
+    # TREE depth (so tree-level rungs and negatives are accepted), then
+    # clamp to each leaf's own ladder top
+    depth = tree_num_rungs(nested_params)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
         nested_params, is_leaf=lambda x: isinstance(x, NestedTensor))
+    out = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        if isinstance(leaf, NestedTensor) and key in rung:
+            leaf = leaf.with_rung(min(check_rung(rung[key], depth), leaf.top))
+        out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 def set_tree_mode(nested_params, mode: str):

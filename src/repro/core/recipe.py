@@ -1,0 +1,194 @@
+"""Declarative quantization recipes (DESIGN.md Sec. 9).
+
+A :class:`QuantRecipe` describes HOW a parameter tree is nested - the
+default ladder plus an ordered list of per-layer :class:`LayerOverride`
+rules matched on the pytree key (regex, first match wins) - so e.g.
+attention projections get an ``(8, 6, 4)`` ladder while the MLP gets
+``(8, 4)`` and embeddings stay dense.  ``quantize(params, recipe)`` is
+the one entry point; the kwarg-soup ``nest_quantize_tree`` survives as a
+thin shim over it.
+
+Recipes are data: ``to_json``/``from_json`` round-trip everything except
+a custom ``predicate`` callable (JSON recipes use the default matmul
+predicate), which is what ``launch/serve --recipe recipe.json`` loads.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field, fields, replace
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+
+from .decompose import ROUNDINGS, normalize_bits
+from .nesting import NestedTensor, default_predicate, nest_quantize
+
+
+def _check_rounding(rounding: str) -> str:
+    if rounding not in ROUNDINGS:
+        raise ValueError(f"rounding {rounding!r} not in {ROUNDINGS}")
+    return rounding
+
+
+@dataclass(frozen=True)
+class LayerOverride:
+    """One per-layer rule: leaves whose pytree key matches ``pattern``
+    (``re.search`` on ``jax.tree_util.keystr``, e.g. ``r"attn"`` or
+    ``r"\\['w_gate'\\]"``) take these settings instead of the recipe
+    defaults.  ``dense=True`` keeps matching leaves in floating point;
+    ``None`` fields inherit the recipe default."""
+    pattern: str
+    bits: Optional[Tuple[int, ...]] = None
+    rounding: Optional[str] = None
+    block: Optional[int] = None
+    group_size: Optional[int] = None
+    dense: bool = False
+
+    def __post_init__(self):
+        re.compile(self.pattern)             # fail fast on a bad regex
+        if self.bits is not None:
+            object.__setattr__(self, "bits", normalize_bits(self.bits))
+        if self.rounding is not None:
+            _check_rounding(self.rounding)
+        if self.dense and (self.bits or self.rounding or self.block
+                           or self.group_size):
+            raise ValueError(f"override {self.pattern!r}: dense=True takes "
+                             "no quantization settings")
+
+    def matches(self, path: str) -> bool:
+        return re.search(self.pattern, path) is not None
+
+
+@dataclass(frozen=True)
+class LeafSpec:
+    """Resolved per-leaf quantization settings (recipe default with any
+    matching override folded in)."""
+    bits: Tuple[int, ...]
+    rounding: str
+    block: Optional[int]
+    group_size: Optional[int]
+
+
+@dataclass(frozen=True)
+class QuantRecipe:
+    """Declarative whole-model nesting spec (DESIGN.md Sec. 9).
+
+    ``bits`` is the default ladder (any order; normalized ascending);
+    ``overrides`` are checked IN ORDER against each candidate leaf's
+    pytree key and the first match wins - put specific rules before
+    broad ones.  ``predicate`` selects candidate leaves (default: matmul
+    weights; norms/bias/conv stay dense); leaves failing it never reach
+    the overrides."""
+    bits: Tuple[int, ...] = (4, 8)
+    rounding: str = "adaptive"
+    block: Optional[int] = None
+    group_size: Optional[int] = None
+    overrides: Tuple[LayerOverride, ...] = ()
+    predicate: Callable[[str, Any], bool] = field(
+        default=default_predicate, compare=False)
+
+    def __post_init__(self):
+        object.__setattr__(self, "bits", normalize_bits(self.bits))
+        _check_rounding(self.rounding)
+        object.__setattr__(self, "overrides", tuple(self.overrides))
+
+    # -- matching ---------------------------------------------------------
+    def resolve(self, path: str, leaf: Any = None) -> Optional[LeafSpec]:
+        """Settings for the leaf at ``path``, or None to keep it dense.
+
+        ``leaf`` (when given) is screened through ``predicate`` first,
+        then the FIRST matching override applies; no match -> defaults."""
+        if leaf is not None and not self.predicate(path, leaf):
+            return None
+        for ov in self.overrides:
+            if ov.matches(path):
+                if ov.dense:
+                    return None
+                return LeafSpec(
+                    bits=ov.bits if ov.bits is not None else self.bits,
+                    rounding=ov.rounding or self.rounding,
+                    block=ov.block if ov.block is not None else self.block,
+                    group_size=(ov.group_size if ov.group_size is not None
+                                else self.group_size))
+        return LeafSpec(self.bits, self.rounding, self.block, self.group_size)
+
+    # -- JSON round-trip --------------------------------------------------
+    def to_json(self) -> str:
+        ovs = []
+        for ov in self.overrides:
+            d = {"pattern": ov.pattern}
+            if ov.dense:
+                d["dense"] = True
+            for k in ("bits", "rounding", "block", "group_size"):
+                v = getattr(ov, k)
+                if v is not None:
+                    d[k] = list(v) if k == "bits" else v
+            ovs.append(d)
+        return json.dumps({"bits": list(self.bits), "rounding": self.rounding,
+                           "block": self.block, "group_size": self.group_size,
+                           "overrides": ovs}, indent=2)
+
+    @classmethod
+    def from_json(cls, text: str) -> "QuantRecipe":
+        d = json.loads(text)
+        known = {f.name for f in fields(cls)} - {"overrides", "predicate"}
+        bad = set(d) - known - {"overrides"}
+        if bad:
+            raise ValueError(f"unknown recipe fields {sorted(bad)}")
+        ovs = tuple(
+            LayerOverride(pattern=o["pattern"],
+                          bits=tuple(o["bits"]) if o.get("bits") else None,
+                          rounding=o.get("rounding"),
+                          block=o.get("block"),
+                          group_size=o.get("group_size"),
+                          dense=o.get("dense", False))
+            for o in d.get("overrides", ()))
+        kw = {k: v for k, v in d.items() if k in known and v is not None}
+        if "bits" in kw:
+            kw["bits"] = tuple(kw["bits"])
+        return cls(overrides=ovs, **kw)
+
+    def with_overrides(self, *overrides: LayerOverride) -> "QuantRecipe":
+        """Copy with ``overrides`` PREPENDED (they win over existing rules)."""
+        return replace(self, overrides=tuple(overrides) + self.overrides)
+
+
+def quantize(params, recipe: QuantRecipe):
+    """Run Algorithm 1 over a parameter pytree as described by ``recipe``.
+
+    Returns a pytree of identical structure where selected leaves are
+    :class:`~repro.core.nesting.NestedTensor` ladders (possibly with
+    DIFFERENT per-layer ladders) and everything else is untouched.  The
+    mixed tree serves through the packed kernels unchanged - dispatch is
+    per-leaf (DESIGN.md Sec. 9)."""
+    if not isinstance(recipe, QuantRecipe):
+        raise TypeError(f"expected a QuantRecipe, got {type(recipe).__name__}"
+                        " (old keyword callers: see nest_quantize_tree)")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        spec = recipe.resolve(jax.tree_util.keystr(path), leaf)
+        if spec is None:
+            out.append(leaf)
+        else:
+            out.append(nest_quantize(leaf, bits=spec.bits,
+                                     rounding=spec.rounding, block=spec.block,
+                                     group_size=spec.group_size))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def recipe_summary(nested_params) -> str:
+    """Human-readable per-leaf ladder map of a quantized tree (debugging
+    aid for recipe authors)."""
+    lines = []
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        nested_params, is_leaf=lambda x: isinstance(x, NestedTensor))
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        if isinstance(leaf, NestedTensor):
+            lines.append(f"{key}: bits={leaf.bits} block={leaf.block}")
+        else:
+            shape = getattr(leaf, "shape", ())
+            lines.append(f"{key}: dense {tuple(shape)}")
+    return "\n".join(lines)

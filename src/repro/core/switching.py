@@ -1,5 +1,6 @@
 """On-device model switching runtime (paper Sec. 3.3, Table 11),
-generalized to a K-rung ladder state machine (DESIGN.md Sec. 8).
+generalized to a K-rung ladder state machine (DESIGN.md Sec. 8) with
+per-leaf rung assignments (DESIGN.md Sec. 9).
 
 A :class:`NestQuantStore` owns the packed decomposed weights of one model.
 On TPU the paper's memory page-in/page-out maps to HBM residency (see
@@ -15,9 +16,17 @@ The ledger generalizes the paper's Table 11 accounting to K rungs:
                                     page-out = bytes(INT-bits[r] model)
 The paper's two-level nesting is the 2-rung special case ('part' = rung 0,
 'full' = the top rung).
+
+Rung state is tracked PER LEAF: a :class:`RungAssignment` maps pytree
+paths to rungs and :meth:`NestQuantStore.apply` ledgers each leaf's delta
+page-ins/outs exactly; the classic whole-tree ``to_rung`` is the uniform
+special case.  Per-layer recipes (core.recipe) produce trees whose leaves
+carry DIFFERENT ladders, so rung indices are clamped to each leaf's own
+ladder top.
 """
 from __future__ import annotations
 
+import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -36,15 +45,64 @@ class SwitchLedger:
     page_in_bytes: int = 0
     page_out_bytes: int = 0
     switches: int = 0
-    # (from_rung, to_rung, page_in, page_out) per adjacent rung move
+    # (from_rung, to_rung, page_in, page_out) per rung move; whole-tree
+    # walks record one event per adjacent step, per-leaf applies one event
+    # per moved leaf (possibly spanning several rungs, bytes still exact)
     events: List[Tuple[int, int, int, int]] = field(default_factory=list)
 
-    def record(self, page_in: int, page_out: int,
-               from_rung: int = 0, to_rung: int = 0):
+    def record(self, page_in: int, page_out: int, *,
+               from_rung: int, to_rung: int):
+        """Every caller must say WHICH move it is logging - defaulted
+        from/to rungs silently produced bogus 0->0 events."""
         self.page_in_bytes += page_in
         self.page_out_bytes += page_out
         self.switches += 1
         self.events.append((from_rung, to_rung, page_in, page_out))
+
+
+# ---------------------------------------------------------------------------
+# Per-leaf rung assignments
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class RungAssignment:
+    """Maps nested-leaf paths to target rungs (DESIGN.md Sec. 9).
+
+    Resolution order per leaf: ``exact`` path entry -> first matching
+    ``overrides`` regex (``re.search`` on the keystr) -> ``default``.
+    Entries accept anything :func:`mode_to_rung` does (int, 'part',
+    'full', 'rungK'); resolved rungs are clamped to each leaf's own
+    ladder top, since per-layer recipes mix ladder depths."""
+    default: object = -1
+    overrides: Tuple[Tuple[str, object], ...] = ()
+    exact: Tuple[Tuple[str, object], ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "overrides", tuple(
+            (str(p), r) for p, r in self.overrides))
+        object.__setattr__(self, "exact", tuple(
+            (str(p), r) for p, r in self.exact))
+        for pat, _ in self.overrides:
+            re.compile(pat)
+        object.__setattr__(self, "_exact_map", dict(self.exact))
+
+    @classmethod
+    def uniform(cls, rung) -> "RungAssignment":
+        return cls(default=rung)
+
+    @property
+    def is_uniform(self) -> bool:
+        return not self.overrides and not self.exact
+
+    def rung_for(self, path: str, tree_rungs: int, leaf_rungs: int) -> int:
+        want = self._exact_map.get(path)
+        if want is None:
+            for pat, r in self.overrides:
+                if re.search(pat, path):
+                    want = r
+                    break
+            else:
+                want = self.default
+        return min(mode_to_rung(want, tree_rungs), leaf_rungs - 1)
 
 
 def diverse_bitwidth_bytes(nested_params, n: int, h: int) -> Dict[str, int]:
@@ -78,8 +136,10 @@ class NestQuantStore:
     """Holds a nested model + the rung-switching state machine.
 
     ``mode`` accepts the two-level-era strings ('part' | 'full'), a
-    'rungK' string, or an int rung index; internally the store tracks the
-    integer ``rung`` (0 = base, num_rungs-1 = full-bit).  ``n``/``h``
+    'rungK' string, or an int rung index; internally the store tracks a
+    rung PER LEAF plus the tree-level ``rung`` summary (when leaves
+    disagree the store is *mixed*: ``mode`` reads 'mixed' and ``rung`` is
+    the minimum resident rung, the guaranteed floor).  ``n``/``h``
     default to the tree's own ladder extremes (top/base bitwidths); pass
     them only to pin a different 2-level diverse baseline."""
     nested_params: object
@@ -97,10 +157,21 @@ class NestQuantStore:
         # (ensure_mode consults these totals on every request batch)
         self._ladder_bytes = tree_ladder_bytes(self.nested_params)
         self._bytes = tree_bytes(self.nested_params)
-        bits = [leaf.bits for leaf in jax.tree_util.tree_leaves(
-                    self.nested_params,
-                    is_leaf=lambda x: isinstance(x, NestedTensor))
-                if isinstance(leaf, NestedTensor)]
+        flat, _ = jax.tree_util.tree_flatten_with_path(
+            self.nested_params, is_leaf=lambda x: isinstance(x, NestedTensor))
+        self._leaf_paths: List[str] = []
+        self._leaf_streams: Dict[str, Tuple[int, ...]] = {}
+        self._leaf_bits: Dict[str, Tuple[int, ...]] = {}
+        self._leaf_rungs: Dict[str, int] = {}
+        for path, leaf in flat:
+            if not isinstance(leaf, NestedTensor):
+                continue
+            key = jax.tree_util.keystr(path)
+            self._leaf_paths.append(key)
+            self._leaf_streams[key] = leaf.stream_nbytes()
+            self._leaf_bits[key] = leaf.bits
+            self._leaf_rungs[key] = min(self.rung, leaf.num_rungs - 1)
+        bits = list(self._leaf_bits.values())
         if self.n is None:
             self.n = max((b[-1] for b in bits), default=8)
         if self.h is None:
@@ -122,31 +193,146 @@ class NestQuantStore:
         return self._ladder_bytes["deltas"][i]
 
     def rung_resident_bytes(self, rung: int) -> int:
-        """HBM the store needs WITH rung ``rung`` resident (base + scales +
-        fp leftovers + the first ``rung`` delta streams)."""
+        """HBM the store needs WITH rung ``rung`` uniformly resident
+        (base + scales + fp leftovers + the first ``rung`` delta streams)."""
         rung = check_rung(rung, self.num_rungs)
         b = self._ladder_bytes
         return (b["base"] + b["scales"] + b["fp"] + sum(b["deltas"][:rung]))
 
     def resident_bytes(self) -> int:
-        return self.rung_resident_bytes(self.rung)
+        """HBM needed for the CURRENT (possibly mixed) per-leaf residency."""
+        if not self.is_mixed:
+            return self.rung_resident_bytes(self.rung)
+        return self.assignment_resident_bytes(self.current_assignment())
+
+    def assignment_resident_bytes(self, assignment: RungAssignment) -> int:
+        """Would-be HBM residency under ``assignment``: base + scales + fp
+        plus each leaf's first ``rung`` delta streams (exact per-leaf sum,
+        the mixed-rung generalization of :meth:`rung_resident_bytes`)."""
+        b = self._ladder_bytes
+        total = b["base"] + b["scales"] + b["fp"]
+        for path, rung in self.resolve_assignment(assignment).items():
+            total += sum(self._leaf_streams[path][1:1 + rung])
+        return total
 
     def best_rung_for(self, memory_budget_bytes: Optional[int]) -> int:
-        """Highest rung whose resident bytes fit the budget (rung 0 is the
-        floor: the base stream is always resident)."""
+        """Highest uniform rung whose resident bytes fit the budget.
+
+        Rung 0 is the FLOOR: the base stream is always resident, so a
+        budget below even rung 0's bytes still returns 0 - the store
+        never serves less than the base model (callers wanting to refuse
+        service below the floor must compare rung_resident_bytes(0)
+        themselves).  Residency is monotone in the rung, so the scan
+        stops at the first rung that no longer fits."""
         if memory_budget_bytes is None:
             return self.num_rungs - 1
         want = 0
         for r in range(self.num_rungs):
             if self.rung_resident_bytes(r) <= memory_budget_bytes:
                 want = r
+            else:
+                break
         return want
 
+    # -- per-leaf rung state ---------------------------------------------
+    @property
+    def is_mixed(self) -> bool:
+        """True when leaves sit on different rungs (beyond each ladder's
+        own depth clamp)."""
+        return self._uniform_rung() is None
+
+    def _uniform_rung(self) -> Optional[int]:
+        """The tree-level rung r such that every leaf sits at
+        min(r, leaf top), or None when the residency is mixed."""
+        if not self._leaf_rungs:
+            return self.rung
+        # the deepest leaf always reaches the tree-level rung un-clamped,
+        # so the max leaf rung IS the candidate tree rung
+        cand = max(self._leaf_rungs.values())
+        for path, r in self._leaf_rungs.items():
+            if r != min(cand, len(self._leaf_streams[path]) - 1):
+                return None
+        return cand
+
+    def leaf_rungs(self) -> Dict[str, int]:
+        """Copy of the current per-leaf rung map (keystr path -> rung)."""
+        return dict(self._leaf_rungs)
+
+    def leaf_bits(self) -> Dict[str, Tuple[int, ...]]:
+        """Per-leaf ladder bitwidths (keystr path -> ascending bits)."""
+        return dict(self._leaf_bits)
+
+    def nested_leaves(self) -> List[Tuple[str, NestedTensor]]:
+        """(keystr path, NestedTensor) for every nested leaf, tree order."""
+        flat, _ = jax.tree_util.tree_flatten_with_path(
+            self.nested_params, is_leaf=lambda x: isinstance(x, NestedTensor))
+        return [(jax.tree_util.keystr(p), leaf) for p, leaf in flat
+                if isinstance(leaf, NestedTensor)]
+
+    def resolve_assignment(self, assignment: RungAssignment) -> Dict[str, int]:
+        """Concrete per-leaf target rungs under ``assignment`` (clamped to
+        each leaf's ladder)."""
+        return {p: assignment.rung_for(p, self.num_rungs,
+                                       len(self._leaf_streams[p]))
+                for p in self._leaf_paths}
+
+    def current_assignment(self) -> RungAssignment:
+        """The current residency as an exact-path RungAssignment (what a
+        policy returns to mean 'hold')."""
+        return RungAssignment(default=self.rung,
+                              exact=tuple(self._leaf_rungs.items()))
+
     # -- switching -------------------------------------------------------
+    def apply(self, assignment: RungAssignment) -> Dict[str, int]:
+        """Move residency to ``assignment``, ledgering each leaf's delta
+        page-ins/outs EXACTLY (DESIGN.md Sec. 9).
+
+        The uniform case delegates to :meth:`to_rung` (one tree-wide
+        ledger event per adjacent step, the classic Table-11 form);
+        otherwise one event per moved leaf, whose bytes are the exact sum
+        of that leaf's walked delta streams.  Returns
+        ``{'page_in', 'page_out', 'moves'}`` for this call alone."""
+        if not isinstance(assignment, RungAssignment):
+            assignment = RungAssignment.uniform(assignment)
+        before_in = self.ledger.page_in_bytes
+        before_out = self.ledger.page_out_bytes
+        before_ev = len(self.ledger.events)
+        if assignment.is_uniform and not self.is_mixed:
+            self.to_rung(mode_to_rung(assignment.default, self.num_rungs))
+        else:
+            targets = self.resolve_assignment(assignment)
+            for path in self._leaf_paths:
+                cur, tgt = self._leaf_rungs[path], targets[path]
+                if tgt == cur:
+                    continue
+                deltas = self._leaf_streams[path][1:]
+                if tgt > cur:
+                    pin, pout = sum(deltas[cur:tgt]), 0
+                else:
+                    pin, pout = 0, sum(deltas[tgt:cur])
+                self.ledger.record(page_in=pin, page_out=pout,
+                                   from_rung=cur, to_rung=tgt)
+                self._leaf_rungs[path] = tgt
+            uni = self._uniform_rung()
+            if uni is None:
+                self.rung = min(self._leaf_rungs.values())
+                self.mode = "mixed"
+            else:
+                self.rung = uni
+                self.mode = rung_to_mode(uni, self.num_rungs)
+        return {"page_in": self.ledger.page_in_bytes - before_in,
+                "page_out": self.ledger.page_out_bytes - before_out,
+                "moves": len(self.ledger.events) - before_ev}
+
     def to_rung(self, rung: int):
-        """Walk the ladder one adjacent rung at a time, ledgering exactly
-        bytes(delta_k) per step (Table 11, K-rung)."""
+        """Walk the whole tree one adjacent rung at a time, ledgering
+        exactly bytes(delta_k) per step (Table 11, K-rung).  From a MIXED
+        state this delegates to :meth:`apply` so each leaf's walk is
+        ledgered exactly."""
         rung = mode_to_rung(rung, self.num_rungs)
+        if self.is_mixed:
+            self.apply(RungAssignment.uniform(rung))
+            return self
         while self.rung < rung:
             self.ledger.record(page_in=self.delta_bytes(self.rung), page_out=0,
                                from_rung=self.rung, to_rung=self.rung + 1)
@@ -157,6 +343,9 @@ class NestQuantStore:
                                from_rung=self.rung, to_rung=self.rung - 1)
             self.rung -= 1
         self.mode = rung_to_mode(self.rung, self.num_rungs)
+        for path in self._leaf_paths:
+            self._leaf_rungs[path] = min(
+                self.rung, len(self._leaf_streams[path]) - 1)
         return self
 
     def to_full(self):
@@ -169,13 +358,17 @@ class NestQuantStore:
 
     # -- weights for inference -------------------------------------------
     def params(self):
-        """Serving parameters: the PACKED tree, rung-stamped.
+        """Serving parameters: the PACKED tree, rung-stamped per leaf.
 
         No dequantization happens here - NestedTensor leaves flow into the
         model as-is and the matmul dispatch (models.layers.packed_linear)
         streams the packed words directly.  A rung switch is therefore an
         O(#leaves) metadata flip (plus the ledgered adjacent-delta page-in
-        on upgrade), never a whole-tree dequant."""
+        on upgrade), never a whole-tree dequant.  Mixed residency stamps
+        each leaf's own rung; packed_linear needs no change since it
+        dispatches on the per-leaf stamp."""
+        if self.is_mixed:
+            return set_tree_rung(self.nested_params, dict(self._leaf_rungs))
         return set_tree_rung(self.nested_params, self.rung)
 
     def dense_params(self):

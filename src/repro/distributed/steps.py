@@ -168,16 +168,16 @@ def quantize_abstract(cfg: ModelConfig, n: int = 8, h: int = 4):
 
     The embedding table stays dense (token gather from packed rows is not a
     matmul; production serving keeps it int8/bf16 row-addressable)."""
-    from ..core.nesting import default_predicate, nest_quantize_tree
+    from ..core.nesting import default_predicate
+    from ..core.recipe import QuantRecipe, quantize
     model = make_model(cfg)
     params_abs = jax.eval_shape(model.init, jax.random.PRNGKey(0))
 
     def pred(path, leaf):
         return "embed" not in path.lower() and default_predicate(path, leaf)
 
-    return jax.eval_shape(
-        lambda p: nest_quantize_tree(p, n=n, h=h, rounding="rtn",
-                                     predicate=pred), params_abs)
+    recipe = QuantRecipe(bits=(h, n), rounding="rtn", predicate=pred)
+    return jax.eval_shape(lambda p: quantize(p, recipe), params_abs)
 
 
 def build_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,

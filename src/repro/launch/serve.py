@@ -1,4 +1,4 @@
-"""Serving driver: NestQuant model + batched requests + budget switching.
+"""Serving driver: NestQuant model + batched requests + policy switching.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
       --requests 16 --budget-schedule full,part,full
@@ -6,6 +6,10 @@
   # K-rung ladder: phases may name any rung (rung0..rungK-1 | part | full)
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
       --bits 8,6,4 --budget-schedule full,rung1,part,full
+
+  # declarative per-layer recipe + dwell-window policy (DESIGN.md Sec. 9)
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+      --recipe examples/recipe.json --policy hysteresis
 """
 from __future__ import annotations
 
@@ -16,10 +20,11 @@ import numpy as np
 
 import jax
 
+from ..api import (QuantRecipe, Request, ServeEngine, make_policy, quantize,
+                   recipe_summary)
 from ..configs import get_config
-from ..core import NestQuantStore, nest_quantize_tree
+from ..core import NestQuantStore
 from ..core.nesting import mode_to_rung
-from ..serving import Request, ServeEngine
 from ..models import make_model
 
 
@@ -31,6 +36,16 @@ def main(argv=None):
     ap.add_argument("--h", type=int, default=4)
     ap.add_argument("--bits", default=None,
                     help="comma ladder bitwidths (e.g. 8,6,4); overrides n/h")
+    ap.add_argument("--recipe", default=None, metavar="recipe.json",
+                    help="declarative QuantRecipe JSON (per-layer ladders; "
+                         "overrides --bits/--n/--h)")
+    ap.add_argument("--policy", default="budget",
+                    choices=("budget", "hysteresis", "quality"),
+                    help="rung policy driving the engine (default: budget)")
+    ap.add_argument("--dwell", type=int, default=4,
+                    help="hysteresis dwell window (decisions)")
+    ap.add_argument("--quality-floor", type=float, default=20.0,
+                    help="quality policy: min SQNR dB vs the full-bit model")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--budget-schedule", default="full,part,full",
@@ -42,13 +57,22 @@ def main(argv=None):
         cfg = cfg.reduced()
     model = make_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    if args.bits:
-        bits = tuple(int(x) for x in args.bits.split(","))
-        nested = nest_quantize_tree(params, bits=bits)
+    if args.recipe:
+        with open(args.recipe) as f:
+            recipe = QuantRecipe.from_json(f.read())
+    elif args.bits:
+        recipe = QuantRecipe(bits=tuple(int(x) for x in args.bits.split(",")))
     else:
-        nested = nest_quantize_tree(params, n=args.n, h=args.h)
+        recipe = QuantRecipe(bits=(args.h, args.n))
+    nested = quantize(params, recipe)
+    if args.recipe:
+        print("[recipe] per-leaf ladders:")
+        print(recipe_summary(nested))
     store = NestQuantStore(nested, mode="part", dtype=jax.numpy.float32)
-    engine = ServeEngine(cfg, store, max_batch=args.requests, max_len=64)
+    pkw = ({"dwell": args.dwell} if args.policy == "hysteresis" else
+           {"floor": args.quality_floor} if args.policy == "quality" else {})
+    engine = ServeEngine(cfg, store, max_batch=args.requests, max_len=64,
+                         policy=make_policy(args.policy, **pkw))
 
     b = store.bytes()
     need = [store.rung_resident_bytes(r) for r in range(store.num_rungs)]

@@ -1,1 +1,4 @@
-from .engine import ServeEngine, Request
+from .engine import EngineStats, Request, ServeEngine
+from .policies import (POLICIES, BudgetPolicy, HysteresisPolicy,
+                       QualityFloorPolicy, ResourceSignal, RungPolicy,
+                       SignalTracker, make_policy, simulate_policy)

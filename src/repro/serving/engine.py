@@ -1,17 +1,19 @@
 """Serving engine: batched requests, prefill/decode, NestQuant switching.
 
 The engine owns (a) a :class:`NestQuantStore` (packed weights + rung
-state machine) and (b) the jitted prefill/decode steps.  A memory-budget
-signal drives ladder-rung switching at request boundaries - the paper's
-IoT page-in/page-out story mapped to accelerator-HBM residency
-(DESIGN.md Sec. 3): the engine serves the highest rung fitting the
-budget, and every adjacent rung move pages exactly one delta stream
-(DESIGN.md Sec. 8); the paper's full/part pair is the 2-rung case.
+state machine), (b) a :class:`RungPolicy` that turns resource signals
+into per-leaf rung assignments (DESIGN.md Sec. 9), and (c) the jitted
+prefill/decode steps.  At every request boundary the policy sees the
+HBM budget, queue depth, and recent switch history, and the store pages
+exactly the delta streams its assignment moves (DESIGN.md Sec. 8); the
+paper's full/part pair is the 2-rung case under the default
+:class:`BudgetPolicy`.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -22,6 +24,13 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from ..core.switching import NestQuantStore
 from ..models.model import Model, make_model
+from .policies import BudgetPolicy, ResourceSignal, RungPolicy, SignalTracker
+
+# mode_history is a diagnostic ring, not a ledger: the SwitchLedger keeps
+# the exact per-move accounting, so the engine only retains a recent
+# window plus rolling per-mode counts (one entry per generate() call
+# forever would grow unbounded on a long-lived server)
+MODE_HISTORY_CAP = 512
 
 
 @dataclass
@@ -37,50 +46,66 @@ class EngineStats:
     prefills: int = 0
     decode_steps: int = 0
     switches: int = 0
-    mode_history: List[str] = field(default_factory=list)
+    mode_history: deque = field(
+        default_factory=lambda: deque(maxlen=MODE_HISTORY_CAP))
+    mode_counts: Dict[str, int] = field(default_factory=dict)
+
+    def record_mode(self, mode: str):
+        self.mode_history.append(mode)
+        self.mode_counts[mode] = self.mode_counts.get(mode, 0) + 1
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, store: NestQuantStore,
-                 max_batch: int = 8, max_len: int = 128):
+                 max_batch: int = 8, max_len: int = 128,
+                 policy: Optional[RungPolicy] = None):
         self.cfg = cfg
         self.model = make_model(cfg)
         self.store = store
         self.max_batch = max_batch
         self.max_len = max_len
+        self.policy = policy if policy is not None else BudgetPolicy()
         self.stats = EngineStats()
+        self._tracker = SignalTracker()
         self._params = None
         self._prefill = jax.jit(self.model.prefill)
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,))
 
     # -- switching ---------------------------------------------------------
-    def ensure_mode(self, memory_budget_bytes: Optional[int] = None):
-        """Pick the HIGHEST ladder rung fitting the HBM budget and flip
-        residency (rung 0 = the always-resident base, the top rung = the
-        full-bit model; the paper's full/part pair is the 2-rung case).
+    def ensure_mode(self, memory_budget_bytes: Optional[int] = None,
+                    queue_depth: int = 0):
+        """Let the policy pick the residency for the current resource
+        signal and flip it (the default BudgetPolicy serves the HIGHEST
+        ladder rung fitting the HBM budget; rung 0 = the always-resident
+        base, the top rung = the full-bit model).
 
         The serving path never materializes dense weights: ``store.params()``
         is the packed tree with the rung stamped on each leaf, so a switch
         is an O(1)-per-leaf metadata flip plus the ledgered adjacent-delta
         page-ins (upgrade) / page-outs (downgrade).  ``stats.switches``
-        counts only REAL rung changes - first-time parameter pickup is not
-        a switch."""
-        want = self.store.best_rung_for(memory_budget_bytes)
-        changed = want != self.store.rung
+        counts only REAL residency changes - first-time parameter pickup
+        is not a switch.  The scalar-budget call form is unchanged from
+        the pre-policy API."""
+        signal = self._tracker.signal(memory_budget_bytes=memory_budget_bytes,
+                                      queue_depth=queue_depth)
+        report = self.store.apply(self.policy.decide(self.store, signal))
+        changed = report["moves"] > 0
+        self._tracker.note(changed)
         if changed:
-            self.store.to_rung(want)
             self.stats.switches += 1
         if changed or self._params is None:
             self._params = self.store.params()
-        self.stats.mode_history.append(self.store.mode)
+        self.stats.record_mode(self.store.mode)
         return self.store.mode
 
     # -- serving -----------------------------------------------------------
     def generate(self, requests: List[Request],
                  memory_budget_bytes: Optional[int] = None) -> List[Request]:
         """Greedy-decode a batch of requests with the current mode."""
-        assert len(requests) <= self.max_batch
-        self.ensure_mode(memory_budget_bytes)
+        if len(requests) > self.max_batch:
+            raise ValueError(f"batch of {len(requests)} exceeds "
+                             f"max_batch={self.max_batch}")
+        self.ensure_mode(memory_budget_bytes, queue_depth=len(requests))
         params = self._params
         B = len(requests)
         S = max(len(r.prompt) for r in requests)

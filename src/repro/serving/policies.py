@@ -1,0 +1,228 @@
+"""Pluggable rung-selection policies (DESIGN.md Sec. 9).
+
+A :class:`RungPolicy` turns a :class:`ResourceSignal` (HBM budget, queue
+depth, recent switch history) into a :class:`~repro.core.switching.
+RungAssignment` - per-leaf, so policies can serve attention at INT6
+while the MLP stays at INT4.  Shipped policies:
+
+  * :class:`BudgetPolicy` - the classic behavior: highest uniform rung
+    fitting the HBM budget.
+  * :class:`HysteresisPolicy` - wraps any policy; within ``dwell``
+    decisions of the last residency change only downgrades pass
+    (budget safety), upgrades hold.  Kills rung thrash when the budget
+    oscillates around a rung boundary.
+  * :class:`QualityFloorPolicy` - wraps any policy; refuses rungs whose
+    quality proxy (SQNR dB against the full-bit weight, or a
+    core.similarity Pearson correlation) falls below a floor, raising
+    those leaves to their lowest acceptable rung.
+
+Policies see the store read-only; the engine (or
+:func:`simulate_policy`) applies the returned assignment and ledgers the
+page traffic.
+"""
+from __future__ import annotations
+
+import weakref
+from collections import deque
+from dataclasses import dataclass
+from typing import (Dict, List, Optional, Protocol, Sequence, Tuple,
+                    runtime_checkable)
+
+import numpy as np
+
+from ..core.quantizer import sqnr_db
+from ..core.similarity import pearson
+from ..core.switching import NestQuantStore, RungAssignment
+
+
+@dataclass(frozen=True)
+class ResourceSignal:
+    """What the serving environment looks like at one decision point.
+
+    ``step`` is a monotone decision counter and ``recent_switches`` the
+    steps at which residency last changed (newest last) - enough for a
+    policy to implement dwell windows without private bookkeeping."""
+    memory_budget_bytes: Optional[int] = None
+    queue_depth: int = 0
+    step: int = 0
+    recent_switches: Tuple[int, ...] = ()
+
+
+@runtime_checkable
+class RungPolicy(Protocol):
+    def decide(self, store: NestQuantStore,
+               signal: ResourceSignal) -> RungAssignment:
+        """Pick the target residency. Must not mutate the store."""
+        ...
+
+
+class BudgetPolicy:
+    """Today's behavior: the highest uniform rung fitting the HBM budget
+    (rung 0 is the floor - the base stream is always resident)."""
+
+    def decide(self, store: NestQuantStore,
+               signal: ResourceSignal) -> RungAssignment:
+        return RungAssignment.uniform(
+            store.best_rung_for(signal.memory_budget_bytes))
+
+
+class HysteresisPolicy:
+    """Dwell-window wrapper: after any residency change, upgrades are
+    held for ``dwell`` further decisions while downgrades still pass
+    immediately (a shrinking budget is a hard constraint; a recovering
+    one can wait).  On an oscillating budget this collapses the
+    down/up/down/up thrash of the raw inner policy into a single
+    downgrade followed by one (delayed) upgrade."""
+
+    def __init__(self, inner: Optional[RungPolicy] = None, dwell: int = 4):
+        if dwell < 0:
+            raise ValueError(f"dwell must be >= 0, got {dwell}")
+        self.inner = inner if inner is not None else BudgetPolicy()
+        self.dwell = dwell
+
+    def decide(self, store: NestQuantStore,
+               signal: ResourceSignal) -> RungAssignment:
+        want = self.inner.decide(store, signal)
+        cur = store.leaf_rungs()
+        tgt = store.resolve_assignment(want)
+        if tgt == cur:
+            return want
+        in_dwell = (signal.recent_switches
+                    and signal.step - signal.recent_switches[-1] < self.dwell)
+        if not in_dwell:
+            return want
+        held = {p: min(tgt[p], cur[p]) for p in cur}   # downgrades only
+        return RungAssignment(default=store.rung, exact=tuple(held.items()))
+
+
+class QualityFloorPolicy:
+    """Quality-floor wrapper: leaves whose rung would fall below the
+    floor are raised to their lowest acceptable rung, whatever the inner
+    policy asked for (budget pressure must not silently serve garbage).
+
+    ``metric='sqnr'`` floors the per-leaf SQNR in dB of the rung weight
+    against the full-bit weight (core.quantizer.sqnr_db);
+    ``metric='pearson'`` floors the core.similarity Pearson correlation.
+    A leaf NO rung of which meets the floor is pinned to its top rung
+    (the best the artifact can do).  Proxies are computed once per store
+    on the FIRST decision (dequantizing each leaf rung once) and cached
+    - call :meth:`floor_rungs` up front to warm the cache off the
+    serving path."""
+
+    METRICS = ("sqnr", "pearson")
+
+    def __init__(self, inner: Optional[RungPolicy] = None,
+                 floor: float = 20.0, metric: str = "sqnr"):
+        if metric not in self.METRICS:
+            raise ValueError(f"metric {metric!r} not in {self.METRICS}")
+        self.inner = inner if inner is not None else BudgetPolicy()
+        self.floor = floor
+        self.metric = metric
+        # id(store) -> (weakref guard, quality map, floor map); the guard
+        # detects a recycled id after gc, dead entries are swept on miss
+        self._cache: Dict[int, tuple] = {}
+
+    def _entry(self, store: NestQuantStore) -> tuple:
+        key = id(store)
+        hit = self._cache.get(key)
+        if hit is not None and hit[0]() is store:
+            return hit
+        self._cache = {k: v for k, v in self._cache.items()
+                       if v[0]() is not None}
+        qual: Dict[str, Tuple[float, ...]] = {}
+        for path, leaf in store.nested_leaves():
+            full = np.asarray(leaf.full_bit(np.float32))
+            scores = []
+            for r in range(leaf.num_rungs - 1):
+                w = np.asarray(leaf.rung_weight(r, np.float32))
+                if self.metric == "sqnr":
+                    scores.append(float(sqnr_db(full, w)))
+                else:
+                    scores.append(pearson(full, w))
+            scores.append(float("inf") if self.metric == "sqnr" else 1.0)
+            qual[path] = tuple(scores)
+        floors = {path: next((r for r, q in enumerate(scores)
+                              if q >= self.floor), len(scores) - 1)
+                  for path, scores in qual.items()}
+        entry = (weakref.ref(store), qual, floors)
+        self._cache[id(store)] = entry
+        return entry
+
+    def leaf_quality(self, store: NestQuantStore) -> Dict[str, Tuple[float, ...]]:
+        """Per-leaf quality proxy at every rung (top rung is exact ->
+        +inf SQNR / 1.0 correlation)."""
+        return self._entry(store)[1]
+
+    def floor_rungs(self, store: NestQuantStore) -> Dict[str, int]:
+        """Lowest acceptable rung per leaf under the floor (the leaf's
+        top rung when even that misses the floor)."""
+        return self._entry(store)[2]
+
+    def decide(self, store: NestQuantStore,
+               signal: ResourceSignal) -> RungAssignment:
+        want = self.inner.decide(store, signal)
+        floors = self.floor_rungs(store)
+        tgt = store.resolve_assignment(want)
+        raised = {p: max(r, floors[p]) for p, r in tgt.items()}
+        if raised == tgt:
+            return want
+        return RungAssignment(default=want.default,
+                              exact=tuple(raised.items()))
+
+
+POLICIES = {"budget": BudgetPolicy, "hysteresis": HysteresisPolicy,
+            "quality": QualityFloorPolicy}
+
+
+def make_policy(name: str, **kwargs) -> RungPolicy:
+    """CLI-facing factory: 'budget' | 'hysteresis' | 'quality'."""
+    if name not in POLICIES:
+        raise ValueError(f"unknown policy {name!r}; pick from "
+                         f"{sorted(POLICIES)}")
+    return POLICIES[name](**kwargs)
+
+
+class SignalTracker:
+    """Builds :class:`ResourceSignal`s with a monotone step counter and
+    the recent-switch history policies key their dwell windows on.  The
+    engine owns one; :func:`simulate_policy` owns one per run."""
+
+    def __init__(self, history: int = 16):
+        self.step = 0
+        self.switch_steps: deque = deque(maxlen=history)
+
+    def signal(self, memory_budget_bytes: Optional[int] = None,
+               queue_depth: int = 0) -> ResourceSignal:
+        return ResourceSignal(memory_budget_bytes=memory_budget_bytes,
+                              queue_depth=queue_depth, step=self.step,
+                              recent_switches=tuple(self.switch_steps))
+
+    def note(self, moved: bool):
+        """Advance one decision, remembering whether residency changed."""
+        if moved:
+            self.switch_steps.append(self.step)
+        self.step += 1
+
+
+def simulate_policy(policy: RungPolicy, store: NestQuantStore,
+                    budgets: Sequence[Optional[int]]) -> Dict[str, object]:
+    """Drive ``policy`` over a budget trace WITHOUT decoding - the
+    switching cost model on its own (benchmarks, examples, tests).
+
+    Returns {'switches', 'page_in', 'page_out', 'modes'} where 'switches'
+    counts decisions that actually moved residency."""
+    tracker = SignalTracker()
+    in0, out0 = store.ledger.page_in_bytes, store.ledger.page_out_bytes
+    switches = 0
+    modes: List[str] = []
+    for budget in budgets:
+        sig = tracker.signal(memory_budget_bytes=budget)
+        report = store.apply(policy.decide(store, sig))
+        moved = report["moves"] > 0
+        switches += int(moved)
+        tracker.note(moved)
+        modes.append(store.mode)
+    return {"switches": switches,
+            "page_in": store.ledger.page_in_bytes - in0,
+            "page_out": store.ledger.page_out_bytes - out0,
+            "modes": modes}

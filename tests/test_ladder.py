@@ -251,4 +251,4 @@ def test_engine_budget_sweep_selects_every_rung():
     lb = store.ladder_bytes()
     assert store.ledger.page_out_bytes == sum(lb["deltas"])
     assert store.ledger.page_in_bytes == 2 * sum(lb["deltas"])
-    assert eng.stats.mode_history == ["full", "part", "rung1", "full"]
+    assert list(eng.stats.mode_history) == ["full", "part", "rung1", "full"]

@@ -1,0 +1,252 @@
+"""Rung policies + per-leaf assignments: budget edge cases, ledger
+exactness under mixed assignments, hysteresis dwell, quality floors
+(DESIGN.md Sec. 9)."""
+import re
+
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (LayerOverride, NestQuantStore, QuantRecipe,
+                        RungAssignment, quantize)
+from repro.serving.policies import (BudgetPolicy, HysteresisPolicy,
+                                    QualityFloorPolicy, ResourceSignal,
+                                    RungPolicy, make_policy, simulate_policy)
+
+ATTN = r"\['attn'\]"
+
+
+@pytest.fixture(scope="module")
+def mixed_nested():
+    k = jax.random.split(jax.random.PRNGKey(0), 4)
+    params = {
+        "attn": {"wq": {"w": jax.random.normal(k[0], (128, 128))},
+                 "wo": {"w": jax.random.normal(k[1], (128, 128))}},
+        "mlp": {"w_up": {"w": jax.random.normal(k[2], (128, 256))},
+                "w_down": {"w": jax.random.normal(k[3], (256, 128))}},
+    }
+    recipe = QuantRecipe(bits=(8, 4), rounding="rtn", overrides=(
+        LayerOverride(pattern=ATTN, bits=(8, 6, 4)),))
+    return quantize(params, recipe)
+
+
+@pytest.fixture()
+def store(mixed_nested):
+    return NestQuantStore(mixed_nested, mode="part")
+
+
+# ---------------------------------------------------------------------------
+# budget edge cases
+# ---------------------------------------------------------------------------
+def test_budget_below_floor_serves_base(store):
+    """The base stream is always resident: a budget below even rung 0's
+    bytes still returns rung 0 (documented floor behavior)."""
+    assert store.best_rung_for(0) == 0
+    assert store.best_rung_for(store.rung_resident_bytes(0) - 1) == 0
+    assert store.best_rung_for(None) == store.num_rungs - 1
+
+
+def test_budget_exactly_at_rung_boundary(store):
+    """A budget EXACTLY equal to a rung's resident bytes admits that rung
+    (<=, not <)."""
+    for r in range(store.num_rungs):
+        assert store.best_rung_for(store.rung_resident_bytes(r)) == r
+        if r + 1 < store.num_rungs:
+            assert store.best_rung_for(
+                store.rung_resident_bytes(r + 1) - 1) == r
+
+
+# ---------------------------------------------------------------------------
+# per-leaf assignments: ledger exactness
+# ---------------------------------------------------------------------------
+def test_mixed_assignment_ledger_exact_round_trip(store):
+    """apply(assignment) ledger totals == the per-leaf sum of delta bytes
+    moved, exactly, and a round trip restores the uniform state."""
+    streams = {p: leaf.stream_nbytes() for p, leaf in store.nested_leaves()}
+    up = RungAssignment(default=0, overrides=((ATTN, 2),))
+    expect_in = sum(sum(s[1:3]) for p, s in streams.items()
+                    if re.search(ATTN, p))
+    rep = store.apply(up)
+    assert rep["page_in"] == expect_in and rep["page_out"] == 0
+    assert store.is_mixed and store.mode == "mixed"
+    assert store.rung == 0                        # min resident = the floor
+    rungs = store.leaf_rungs()
+    assert all(r == (2 if re.search(ATTN, p) else 0)
+               for p, r in rungs.items())
+    # mixed residency accounting: fixed cost + exactly the paged-in deltas
+    assert store.resident_bytes() == store.rung_resident_bytes(0) + expect_in
+    # round trip back down: page-out equals the page-in, state uniform
+    rep2 = store.apply(RungAssignment.uniform(0))
+    assert rep2["page_out"] == expect_in and rep2["page_in"] == 0
+    assert not store.is_mixed and store.rung == 0
+    assert store.ledger.page_in_bytes == store.ledger.page_out_bytes
+
+
+def test_partial_ladder_moves_are_exact(store):
+    """Moving attention 0->1 then 1->2 pages exactly delta_0 then delta_1."""
+    streams = {p: leaf.stream_nbytes() for p, leaf in store.nested_leaves()}
+    d0 = sum(s[1] for p, s in streams.items() if re.search(ATTN, p))
+    d1 = sum(s[2] for p, s in streams.items() if re.search(ATTN, p))
+    assert store.apply(RungAssignment(
+        default=0, overrides=((ATTN, 1),)))["page_in"] == d0
+    assert store.apply(RungAssignment(
+        default=0, overrides=((ATTN, 2),)))["page_in"] == d1
+    # exact-path form holds the state (policies say "no change" this way)
+    rep = store.apply(store.current_assignment())
+    assert rep["moves"] == 0
+
+
+def test_uniform_apply_delegates_to_to_rung(store):
+    """The uniform special case keeps the classic tree-wide adjacent-step
+    event granularity."""
+    store.apply(RungAssignment.uniform(2))
+    assert [e[:2] for e in store.ledger.events] == [(0, 1), (1, 2)]
+    assert store.mode == "full" and not store.is_mixed
+
+
+def test_record_requires_move_labels(store):
+    with pytest.raises(TypeError):
+        store.ledger.record(10, 0)               # from/to now required
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+def _needs(store):
+    return [store.rung_resident_bytes(r) for r in range(store.num_rungs)]
+
+
+def test_budget_policy_matches_best_rung_for(store):
+    pol = BudgetPolicy()
+    need = _needs(store)
+    for budget, want in ((None, 2), (need[1], 1), (0, 0)):
+        a = pol.decide(store, ResourceSignal(memory_budget_bytes=budget))
+        assert a.is_uniform
+        assert store.resolve_assignment(a) == store.resolve_assignment(
+            RungAssignment.uniform(want))
+    assert isinstance(pol, RungPolicy)
+
+
+def test_hysteresis_reduces_switches_on_oscillation(mixed_nested):
+    need = _needs(NestQuantStore(mixed_nested, mode="part"))
+    osc = [need[-1] * 2, need[0]] * 3 + [need[-1] * 2] * 5
+    raw = simulate_policy(BudgetPolicy(),
+                          NestQuantStore(mixed_nested, mode="full"), osc)
+    hyst = simulate_policy(HysteresisPolicy(dwell=4),
+                           NestQuantStore(mixed_nested, mode="full"), osc)
+    assert hyst["switches"] < raw["switches"]
+    assert (hyst["page_in"] + hyst["page_out"]
+            < raw["page_in"] + raw["page_out"])
+    # downgrades always pass (budget is a hard constraint)...
+    assert hyst["modes"][1] == "part"
+    # ...and the held upgrade eventually lands once the dwell expires
+    assert hyst["modes"][-1] == "full"
+
+
+def test_hysteresis_validation():
+    with pytest.raises(ValueError):
+        HysteresisPolicy(dwell=-1)
+    with pytest.raises(ValueError):
+        make_policy("nope")
+
+
+def test_quality_floor_raises_low_rungs(store):
+    pol = QualityFloorPolicy(floor=1e9, metric="sqnr")   # nothing passes
+    a = pol.decide(store, ResourceSignal(memory_budget_bytes=0))
+    # every leaf raised to its own exact top rung
+    assert store.resolve_assignment(a) == {
+        p: len(s.stream_nbytes()) - 1 for p, s in store.nested_leaves()}
+    relaxed = QualityFloorPolicy(floor=-1e9, metric="sqnr")  # all pass
+    a = relaxed.decide(store, ResourceSignal(memory_budget_bytes=0))
+    assert set(store.resolve_assignment(a).values()) == {0}
+
+
+def test_quality_floor_pearson_monotone(store):
+    pol = QualityFloorPolicy(floor=0.5, metric="pearson")
+    for scores in pol.leaf_quality(store).values():
+        assert list(scores) == sorted(scores)    # quality rises with rung
+        assert scores[-1] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# engine integration: policy= constructor, scalar budget still accepted
+# ---------------------------------------------------------------------------
+def test_engine_with_hysteresis_policy(mixed_nested):
+    from repro.configs import get_config
+    from repro.models import make_model
+    from repro.serving import ServeEngine
+
+    cfg = get_config("qwen2-1.5b").reduced()
+    params = make_model(cfg).init(jax.random.PRNGKey(0))
+    recipe = QuantRecipe(bits=(8, 4), rounding="rtn")
+    store = NestQuantStore(quantize(params, recipe), mode="full",
+                           dtype=jnp.float32)
+    eng = ServeEngine(cfg, store, max_batch=2, max_len=32,
+                      policy=HysteresisPolicy(dwell=3))
+    need = _needs(store)
+    modes = [eng.ensure_mode(b) for b in
+             (None, need[0], None, need[0], None, None, None)]
+    # one downgrade (step 1), upgrades held while step - 1 < dwell
+    # (steps 2 and 3), then one upgrade (step 4)
+    assert modes == ["full", "part", "part", "part", "full", "full", "full"]
+    assert eng.stats.switches == 2
+    assert eng.stats.mode_counts == {"full": 4, "part": 3}
+
+
+def test_mixed_recipe_serves_packed_no_materialize(monkeypatch):
+    """A per-layer recipe (deep attention ladder, shallow MLP) generates
+    under a MIXED rung assignment straight from the packed words - zero
+    materialize() calls (the Sec. 9 acceptance path)."""
+    import numpy as np
+    import repro.core.nesting as nesting
+    import repro.core.switching as switching
+    from repro.configs import get_config
+    from repro.models import make_model
+    from repro.serving import Request, ServeEngine
+
+    cfg = get_config("qwen2-1.5b").reduced()
+    params = make_model(cfg).init(jax.random.PRNGKey(0))
+    recipe = QuantRecipe(bits=(8, 4), rounding="rtn", overrides=(
+        LayerOverride(pattern=r"\['(q|k|v|o)'\]", bits=(8, 6, 4)),))
+    store = NestQuantStore(quantize(params, recipe), mode="part",
+                           dtype=jnp.float32)
+
+    class MixedPolicy:
+        def decide(self, store, signal):
+            return RungAssignment(default=0,
+                                  overrides=((r"\['(q|k|v|o)'\]", -1),))
+
+    def _boom(*args, **kwargs):
+        raise AssertionError("materialize() called on the serving path")
+
+    monkeypatch.setattr(nesting, "materialize", _boom)
+    monkeypatch.setattr(switching, "materialize", _boom)
+    eng = ServeEngine(cfg, store, max_batch=2, max_len=32,
+                      policy=MixedPolicy())
+    reqs = [Request(i, np.array([3, 1, 4], np.int32), 2) for i in range(2)]
+    eng.generate(reqs)
+    assert store.is_mixed and store.mode == "mixed"
+    assert all(len(r.out_tokens) == 2 for r in reqs)
+    assert all(0 <= t < cfg.vocab_size for r in reqs for t in r.out_tokens)
+
+
+def test_generate_overbatch_raises(mixed_nested):
+    from repro.configs import get_config
+    from repro.serving import Request, ServeEngine
+    import numpy as np
+
+    cfg = get_config("qwen2-1.5b").reduced()
+    store = NestQuantStore(mixed_nested, mode="part", dtype=jnp.float32)
+    eng = ServeEngine(cfg, store, max_batch=1, max_len=32)
+    reqs = [Request(i, np.array([1, 2], np.int32), 1) for i in range(2)]
+    with pytest.raises(ValueError, match="max_batch"):
+        eng.generate(reqs)
+
+
+def test_mode_history_is_bounded():
+    from repro.serving.engine import MODE_HISTORY_CAP, EngineStats
+    stats = EngineStats()
+    for i in range(MODE_HISTORY_CAP + 100):
+        stats.record_mode("part" if i % 2 else "full")
+    assert len(stats.mode_history) == MODE_HISTORY_CAP
+    assert sum(stats.mode_counts.values()) == MODE_HISTORY_CAP + 100

@@ -1,0 +1,127 @@
+"""Declarative quant recipes: matching order, per-layer ladders, JSON
+round-trip, and the nest_quantize_tree compatibility shim (DESIGN.md
+Sec. 9)."""
+import warnings
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (LayerOverride, NestedTensor, NestQuantStore,
+                        QuantRecipe, nest_quantize_tree, quantize)
+from repro.core.recipe import recipe_summary
+
+
+@pytest.fixture(scope="module")
+def params():
+    k = jax.random.split(jax.random.PRNGKey(0), 5)
+    return {
+        "attn": {"wq": {"w": jax.random.normal(k[0], (128, 128))},
+                 "wo": {"w": jax.random.normal(k[1], (128, 128))}},
+        "mlp": {"w_up": {"w": jax.random.normal(k[2], (128, 256))},
+                "w_down": {"w": jax.random.normal(k[3], (256, 128))}},
+        "embed": {"table": jax.random.normal(k[4], (512, 128))},
+        "norm": {"scale": jnp.ones((128,))},
+    }
+
+
+def _leaves(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, NestedTensor))
+    return {jax.tree_util.keystr(p): leaf for p, leaf in flat}
+
+
+def test_per_layer_ladders(params):
+    recipe = QuantRecipe(bits=(8, 4), rounding="rtn", overrides=(
+        LayerOverride(pattern=r"\['attn'\]", bits=(8, 6, 4)),
+        LayerOverride(pattern=r"\['embed'\]", dense=True),
+    ))
+    nested = quantize(params, recipe)
+    leaves = _leaves(nested)
+    assert leaves["['attn']['wq']['w']"].bits == (4, 6, 8)
+    assert leaves["['attn']['wo']['w']"].bits == (4, 6, 8)
+    assert leaves["['mlp']['w_up']['w']"].bits == (4, 8)
+    assert not isinstance(leaves["['embed']['table']"], NestedTensor)
+    assert not isinstance(leaves["['norm']['scale']"], NestedTensor)
+    summary = recipe_summary(nested)
+    assert "bits=(4, 6, 8)" in summary and "dense (512, 128)" in summary
+
+
+def test_override_order_first_match_wins(params):
+    recipe = QuantRecipe(bits=(8, 4), rounding="rtn", overrides=(
+        LayerOverride(pattern=r"\['wq'\]", bits=(8, 6)),
+        LayerOverride(pattern=r"\['attn'\]", bits=(8, 6, 4)),
+    ))
+    leaves = _leaves(quantize(params, recipe))
+    assert leaves["['attn']['wq']['w']"].bits == (6, 8)      # specific rule
+    assert leaves["['attn']['wo']['w']"].bits == (4, 6, 8)   # broad rule
+
+
+def test_override_inherits_defaults():
+    ov = LayerOverride(pattern="x", bits=(8, 6))
+    recipe = QuantRecipe(bits=(8, 4), rounding="rtn", group_size=32,
+                         overrides=(ov,))
+    spec = recipe.resolve("['x']['w']")
+    assert spec.bits == (6, 8) and spec.rounding == "rtn"
+    assert spec.group_size == 32                 # inherited from the recipe
+    assert recipe.resolve("['y']['w']").bits == (4, 8)
+
+
+def test_recipe_validation():
+    with pytest.raises(ValueError):
+        QuantRecipe(bits=(8, 4), rounding="nope")
+    with pytest.raises(Exception):
+        LayerOverride(pattern="(unclosed")
+    with pytest.raises(ValueError):
+        LayerOverride(pattern="x", dense=True, bits=(8, 4))
+    with pytest.raises(TypeError):
+        quantize({}, "not a recipe")
+
+
+def test_json_round_trip():
+    recipe = QuantRecipe(bits=(8, 4), rounding="rtn", group_size=64,
+                         overrides=(
+        LayerOverride(pattern=r"attn", bits=(8, 6, 4), rounding="bitshift"),
+        LayerOverride(pattern=r"embed", dense=True),
+    ))
+    back = QuantRecipe.from_json(recipe.to_json())
+    assert back.bits == recipe.bits
+    assert back.rounding == recipe.rounding
+    assert back.group_size == recipe.group_size
+    assert back.overrides == recipe.overrides
+    with pytest.raises(ValueError):
+        QuantRecipe.from_json('{"bits": [8, 4], "bogus_field": 1}')
+
+
+def test_shim_matches_recipe_and_warns(params):
+    """nest_quantize_tree(kwargs) == quantize(recipe): bit-identical trees,
+    plus the deprecation note."""
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        old = nest_quantize_tree(params, n=8, h=4, rounding="rtn")
+        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    new = quantize(params, QuantRecipe(bits=(4, 8), rounding="rtn"))
+    old_l, new_l = _leaves(old), _leaves(new)
+    assert old_l.keys() == new_l.keys()
+    for key, a in old_l.items():
+        b = new_l[key]
+        if isinstance(a, NestedTensor):
+            assert a.bits == b.bits
+            np.testing.assert_array_equal(np.asarray(a.w_base),
+                                          np.asarray(b.w_base))
+            for da, db in zip(a.deltas, b.deltas):
+                np.testing.assert_array_equal(np.asarray(da), np.asarray(db))
+
+
+def test_mixed_tree_store_and_serving_stamp(params):
+    """A per-layer tree flows through the store: per-leaf clamped stamps,
+    exact mixed residency accounting."""
+    recipe = QuantRecipe(bits=(8, 4), rounding="rtn", overrides=(
+        LayerOverride(pattern=r"\['attn'\]", bits=(8, 6, 4)),))
+    nested = quantize(params, recipe)
+    store = NestQuantStore(nested, mode="full")
+    assert store.num_rungs == 3
+    leaves = _leaves(store.params())
+    assert leaves["['attn']['wq']['w']"].rung == 2
+    assert leaves["['mlp']['w_up']['w']"].rung == 1     # clamped to its top
