@@ -1,0 +1,107 @@
+"""Bytes-on-wire transport benchmark (DESIGN.md Sec. 10).
+
+The paper's deployment claim: ship and store ONE NestQuant model and
+switch operating points by paging lower-bit weights in and out.  This
+suite makes the transmission/storage tables executable: it saves a real
+artifact to disk, cold-boots a store from manifest + base segment only,
+pages every upgrade through a FilePager, and reports bytes-on-wire for
+
+  * cold boot (manifest + base segment vs the zoo's smallest model),
+  * each rung upgrade (delta segment vs the zoo's next whole model),
+  * the full artifact vs the K-model diverse-PTQ zoo,
+
+plus simulated transfer seconds on a concrete link (ThrottledPager).
+Every upgrade's OBSERVED ledger bytes must equal the artifact's delta
+segment size and the metadata-computed bytes(delta_k) - asserted.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+
+import jax
+
+from repro.api import (FilePager, QuantRecipe, ThrottledPager, open_artifact,
+                       quantize, save_artifact)
+from repro.configs import ARCHS
+from repro.core import NestQuantStore, diverse_ladder_bytes
+from repro.models import make_model
+
+from .common import emit
+
+LINK_MBPS = 100.0                      # simulated delivery link
+LATENCY_S = 0.02
+
+
+def run():
+    rng = jax.random.PRNGKey(0)
+    tmp = tempfile.mkdtemp(prefix="bench_transport_")
+    try:
+        for arch, bits in (("qwen2-1.5b", (8, 6, 4)),
+                           ("mamba2-780m", (8, 4))):
+            cfg = ARCHS[arch].reduced()
+            params = make_model(cfg).init(rng)
+            recipe = QuantRecipe(bits=bits)
+            nested = quantize(params, recipe)
+            path = os.path.join(tmp, f"{arch}_art")
+            manifest = save_artifact(nested, path, recipe=recipe)
+            tag = "_".join(str(b) for b in sorted(bits, reverse=True))
+
+            # cold boot: manifest + base segment ONLY hit the wire
+            art = open_artifact(path)
+            store = NestQuantStore(art.load_base_tree(), mode="part",
+                                   pager=FilePager(art))
+            assert art.segments_read == {"base"}, art.segments_read
+            boot = sum(art.bytes_read.values())
+            zoo = diverse_ladder_bytes(store.nested_params, bits)
+            emit(f"transport_{arch}_{tag}_cold_boot", 0.0,
+                 f"nest_MB={boot/1e6:.3f};"
+                 f"zoo_smallest_MB={zoo['models'][0]/1e6:.3f};"
+                 f"artifact_total_MB={art.total_nbytes()/1e6:.3f}")
+
+            # each upgrade pages exactly one delta segment over the wire;
+            # the zoo downloads the next whole model instead
+            for k in range(store.num_rungs - 1):
+                in0 = store.ledger.page_in_bytes
+                store.to_rung(k + 1)
+                observed = store.ledger.page_in_bytes - in0
+                seg = art.segment_nbytes(art.delta_segment(k))
+                assert observed == seg == store.delta_bytes(k), \
+                    (observed, seg, store.delta_bytes(k))
+                emit(f"transport_{arch}_{tag}_upgrade_rung{k}to{k + 1}", 0.0,
+                     f"nest_MB={observed/1e6:.3f};"
+                     f"zoo_next_model_MB={zoo['models'][k + 1]/1e6:.3f};"
+                     f"reduction={1 - observed / max(zoo['models'][k + 1], 1):.3f}")
+
+            # storage on the wire: one artifact vs the whole zoo
+            nest_total = art.total_nbytes()
+            emit(f"transport_{arch}_{tag}_artifact_vs_zoo", 0.0,
+                 f"nest_MB={nest_total/1e6:.3f};zoo_MB={zoo['total']/1e6:.3f};"
+                 f"reduction={1 - nest_total / max(zoo['total'], 1):.3f}")
+            assert nest_total < zoo["total"]
+
+            # simulated link: seconds to climb base -> top, per stage
+            link = ThrottledPager(FilePager(open_artifact(path)),
+                                  bandwidth_bytes_per_s=LINK_MBPS * 125e3,
+                                  latency_s=LATENCY_S)
+            st = NestQuantStore(open_artifact(path).load_base_tree(),
+                                mode="part", pager=link)
+            st.to_full()
+            # same climb for the zoo: one whole-model download per upgrade,
+            # paying the same per-request latency once per model
+            zoo_s = sum(LATENCY_S + m / (LINK_MBPS * 125e3)
+                        for m in zoo["models"][1:])
+            emit(f"transport_{arch}_{tag}_link{LINK_MBPS:g}mbps", 0.0,
+                 f"nest_transfer_s={link.simulated_seconds:.3f};"
+                 f"nest_MB={link.bytes_moved/1e6:.3f};"
+                 f"fetches={len(link.transfers)};"
+                 f"zoo_transfer_s={zoo_s:.3f}")
+            assert link.bytes_moved == sum(
+                store.delta_bytes(k) for k in range(store.num_rungs - 1))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    run()

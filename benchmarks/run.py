@@ -24,7 +24,7 @@ def main() -> None:
 
     from . import (bench_cliff, bench_kernels, bench_nesting_quality,
                    bench_numerical_errors, bench_similarity, bench_storage,
-                   bench_switching, roofline)
+                   bench_switching, bench_transport, roofline)
     suites = [
         ("table7_numerical_errors", bench_numerical_errors.run),
         ("table4_5_similarity", bench_similarity.run),
@@ -32,6 +32,7 @@ def main() -> None:
         ("fig6_cliff", bench_cliff.run),
         ("table8_9_10_storage", bench_storage.run),
         ("table11_switching", bench_switching.run),
+        ("transport", bench_transport.run),
         ("kernels", bench_kernels.run),
         ("roofline", roofline.run),
     ]

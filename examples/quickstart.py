@@ -80,6 +80,30 @@ def main():
               f"{(r['page_in'] + r['page_out'])/1e6:.2f}MB paged on an "
               f"oscillating budget")
 
+    # 8. deployment (DESIGN.md Sec. 10): save ONE artifact, cold-boot a
+    # store from manifest + base segment only, and page rungs in from
+    # disk - every upgrade moves exactly bytes(delta_k) over the "wire"
+    import shutil
+    import tempfile
+    from repro.api import FilePager, open_artifact, save_artifact
+    tmp = tempfile.mkdtemp()
+    try:
+        save_artifact(ladder, f"{tmp}/artifact", QuantRecipe(bits=(8, 6, 4)))
+        art = open_artifact(f"{tmp}/artifact")
+        cold = NestQuantStore(art.load_base_tree(), mode="part",
+                              pager=FilePager(art))
+        print(f"cold boot read {sum(art.bytes_read.values())/1e6:.2f}MB "
+              f"(manifest+base) of {art.total_nbytes()/1e6:.2f}MB; "
+              f"serving at rung 0")
+        cold.to_full()                      # pages delta_0.seg, delta_1.seg
+        for (r_from, r_to, pin, _) in cold.ledger.events:
+            print(f"  delivered rung {r_from} -> {r_to}: "
+                  f"{pin/1e6:.2f}MB on the wire")
+        assert cold.ledger.page_in_bytes == sum(
+            cold.delta_bytes(k) for k in range(cold.num_rungs - 1))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
 
 if __name__ == "__main__":
     main()

@@ -18,6 +18,9 @@ _API = (
     "ResourceSignal", "SignalTracker", "POLICIES", "make_policy",
     "simulate_policy",
     "ServeEngine", "Request", "EngineStats",
+    "save_artifact", "open_artifact", "load_store", "Artifact",
+    "ArtifactError", "DeltaPager", "InMemoryPager", "FilePager",
+    "ThrottledPager",
     "ARCHS", "get_config", "make_model",
 )
 __all__ = list(_API)

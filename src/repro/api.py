@@ -32,6 +32,9 @@ from .serving.engine import EngineStats, Request, ServeEngine
 from .serving.policies import (POLICIES, BudgetPolicy, HysteresisPolicy,
                                QualityFloorPolicy, ResourceSignal, RungPolicy,
                                SignalTracker, make_policy, simulate_policy)
+from .storage import (Artifact, ArtifactError, DeltaPager, FilePager,
+                      InMemoryPager, ThrottledPager, load_store,
+                      open_artifact, save_artifact)
 
 __all__ = [
     # recipes
@@ -48,6 +51,10 @@ __all__ = [
     "simulate_policy",
     # serving
     "ServeEngine", "Request", "EngineStats",
+    # storage tier (artifacts + pagers, DESIGN.md Sec. 10)
+    "save_artifact", "open_artifact", "load_store", "Artifact",
+    "ArtifactError", "DeltaPager", "InMemoryPager", "FilePager",
+    "ThrottledPager",
     # models/configs
     "ARCHS", "get_config", "make_model",
 ]

@@ -5,6 +5,13 @@ mesh-reshardable: checkpoints are stored as host numpy arrays + a JSON
 manifest, and ``restore(..., mesh, pspecs)`` re-lays them out on any mesh
 shape - the elastic-scaling path (checkpoint on 256 chips, resume on 512,
 or on 1 CPU device in tests).
+
+Packed NestQuant trees round-trip WITHOUT densifying: a NestedTensor is
+a registered pytree, so save/restore move its packed uint32 word arrays
+and FP32 scales while the (shape, bits, block, rung) aux rides in the
+template's treedef - no dequantization on either side.  (Model-shipping
+artifacts with per-segment paging live in repro.storage, DESIGN.md
+Sec. 10; this manager is the training-loop fault-tolerance path.)
 """
 from __future__ import annotations
 
@@ -94,12 +101,13 @@ class CheckpointManager:
         this is the mesh-reshard path for elastic scaling.
         """
         step = self.latest_step() if step is None else step
-        assert step is not None, "no checkpoint found"
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint found in {self.dir}")
         path = os.path.join(self.dir, f"step_{step:010d}")
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
-        data = np.load(os.path.join(path, "arrays.npz"))
-        by_key = {k: data[f"a{i}"] for i, k in enumerate(manifest["keys"])}
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            by_key = {k: data[f"a{i}"] for i, k in enumerate(manifest["keys"])}
 
         flat, treedef = jax.tree_util.tree_flatten_with_path(template)
         spec_flat = None
@@ -109,6 +117,11 @@ class CheckpointManager:
         leaves = []
         for i, (p, tmpl) in enumerate(flat):
             key = jax.tree_util.keystr(p)
+            if key not in by_key:
+                raise KeyError(
+                    f"checkpoint step {step} has no entry for {key!r} "
+                    f"(template has {len(flat)} leaves, checkpoint "
+                    f"{len(by_key)}) - wrong template structure?")
             arr = by_key[key]
             if hasattr(tmpl, "dtype"):
                 arr = arr.astype(tmpl.dtype)

@@ -55,6 +55,12 @@ class NestedTensor:
     how many packed streams (base + deltas[:rung]) the model-side matmul
     dispatch reads.  The arrays themselves are identical at every rung -
     a rung switch is a pure residency/metadata flip.
+
+    Delta entries may be ``None``: a NON-RESIDENT stream whose bytes live
+    in a :class:`~repro.storage.pager.DeltaPager` (DESIGN.md Sec. 10).
+    Residency is always a prefix (levels 0..r-1 present); the stamped
+    ``rung`` never exceeds it, and all byte accounting is computed from
+    (shape, bits, block) metadata so paged-out leaves account exactly.
     """
     w_base: jax.Array             # packed int32, (..., K/block*blocked_rows(block,bits[0]), N)
     deltas: Tuple[jax.Array, ...]  # packed int32 delta streams, ascending
@@ -99,6 +105,26 @@ class NestedTensor:
     def with_mode(self, mode: str) -> "NestedTensor":
         """Two-level-era alias: 'full' = top rung, 'part' = base rung."""
         return self.with_rung(mode_to_rung(mode, self.num_rungs))
+
+    # -- partial residency (delta streams owned by a pager) -----------------
+    @property
+    def resident_levels(self) -> int:
+        """Leading delta streams actually present (residency is a prefix:
+        a store pages levels in and out one adjacent rung at a time)."""
+        n = 0
+        for d in self.deltas:
+            if d is None:
+                break
+            n += 1
+        return n
+
+    def with_deltas(self, deltas) -> "NestedTensor":
+        """Copy with a new delta tuple (page-in/out by the store).  The
+        stamped rung is clamped to the new residency so the matmul
+        dispatch can never be pointed at a paged-out stream."""
+        nt = NestedTensor(self.w_base, tuple(deltas), self.scale, self.shape,
+                          self.bits, self.block, self.rung)
+        return nt.with_rung(min(nt.rung, nt.resident_levels))
 
     @property
     def mode(self) -> str:
@@ -150,11 +176,27 @@ class NestedTensor:
         return self.rung_scale(0)
 
     # -- byte accounting -----------------------------------------------------
+    # Computed from (shape, bits, block) METADATA, never from the arrays:
+    # identical to the packed array sizes (asserted in tests), and exact
+    # even for streams currently paged out to a DeltaPager (deltas[i] is
+    # None) or for abstract ShapeDtypeStruct trees.
+    def _rest(self) -> int:
+        """Elements per K-slice: every dim except the packing axis K."""
+        r = 1
+        for d in self.shape[:-2] + self.shape[-1:]:
+            r *= int(d)
+        return r
+
+    def _stream_rows(self, width: int) -> int:
+        """int32 word rows of one width-bit stream (K padded to blocks)."""
+        return math.ceil(self.K / self.block) * \
+            packing.blocked_rows(self.block, width)
+
     def nbytes_base(self) -> int:
-        return int(np.prod(self.w_base.shape)) * 4
+        return self._stream_rows(self.bits[0]) * self._rest() * 4
 
     def nbytes_delta(self, i: int) -> int:
-        return int(np.prod(self.deltas[i].shape)) * 4
+        return self._stream_rows(delta_bits(self.bits)[i]) * self._rest() * 4
 
     def stream_nbytes(self) -> Tuple[int, ...]:
         """Per-stream packed bytes: (base, delta_0, ..., delta_{R-2})."""
@@ -169,7 +211,7 @@ class NestedTensor:
         return sum(self.nbytes_delta(i) for i in range(len(self.deltas)))
 
     def nbytes_scales(self) -> int:
-        return int(np.prod(self.scale.shape)) * 4
+        return self._rest() * 4                     # f32 (..., 1, N)
 
     # -- materialization ----------------------------------------------------
     def codes_base(self) -> jax.Array:
@@ -177,6 +219,10 @@ class NestedTensor:
                                       self.block, axis=self.w_base.ndim - 2)
 
     def codes_delta(self, i: int) -> jax.Array:
+        if self.deltas[i] is None:
+            raise ValueError(
+                f"delta stream {i} is not resident (paged out to the "
+                "store's pager); fetch it via NestQuantStore before use")
         width = delta_bits(self.bits)[i]
         return packing.unpack_blocked(self.deltas[i], width, self.K,
                                       self.block, axis=self.deltas[i].ndim - 2)

@@ -9,6 +9,16 @@ delta streams are paged in from host/storage on upgrade and dropped on
 downgrade, ONE ADJACENT RUNG AT A TIME - moving from rung k to rung k+1
 touches exactly bytes(delta_k), nothing else.
 
+NON-RESIDENT delta streams live in a pluggable
+:class:`~repro.storage.pager.DeltaPager` (DESIGN.md Sec. 10), not in the
+serving tree: an upgrade calls ``pager.fetch`` and splices the returned
+packed words into the leaf, a downgrade calls ``pager.evict`` and drops
+them, and the ledger records the bytes OBSERVED to move - which the
+store asserts equal the metadata-computed ``bytes(delta_k)``.  The
+default :class:`~repro.storage.pager.InMemoryPager` reproduces the
+classic everything-host-resident behavior bit-for-bit; a
+:class:`~repro.storage.pager.FilePager` pages from an on-disk artifact.
+
 The ledger generalizes the paper's Table 11 accounting to K rungs:
   * NestQuant upgrade k->k+1:    page-in  = bytes(delta_k), page-out = 0
   * NestQuant downgrade k+1->k:  page-in  = 0,  page-out = bytes(delta_k)
@@ -148,26 +158,32 @@ class NestQuantStore:
     mode: object = "part"                  # initial rung (str or int)
     dtype: object = jnp.bfloat16
     ledger: SwitchLedger = field(default_factory=SwitchLedger)
+    pager: object = None                   # DeltaPager; None -> InMemoryPager
 
     def __post_init__(self):
         self.num_rungs = tree_num_rungs(self.nested_params)
         self.rung = mode_to_rung(self.mode, self.num_rungs)
         self.mode = rung_to_mode(self.rung, self.num_rungs)
-        # the packed tree is immutable: walk it ONCE for byte accounting
+        # byte accounting is metadata-computed (shape/bits/block), so it is
+        # exact whatever the current residency; walk the tree ONCE
         # (ensure_mode consults these totals on every request batch)
         self._ladder_bytes = tree_ladder_bytes(self.nested_params)
         self._bytes = tree_bytes(self.nested_params)
-        flat, _ = jax.tree_util.tree_flatten_with_path(
+        flat, treedef = jax.tree_util.tree_flatten_with_path(
             self.nested_params, is_leaf=lambda x: isinstance(x, NestedTensor))
+        self._treedef = treedef
+        self._flat = [leaf for _, leaf in flat]
         self._leaf_paths: List[str] = []
+        self._leaf_index: Dict[str, int] = {}
         self._leaf_streams: Dict[str, Tuple[int, ...]] = {}
         self._leaf_bits: Dict[str, Tuple[int, ...]] = {}
         self._leaf_rungs: Dict[str, int] = {}
-        for path, leaf in flat:
+        for i, (path, leaf) in enumerate(flat):
             if not isinstance(leaf, NestedTensor):
                 continue
             key = jax.tree_util.keystr(path)
             self._leaf_paths.append(key)
+            self._leaf_index[key] = i
             self._leaf_streams[key] = leaf.stream_nbytes()
             self._leaf_bits[key] = leaf.bits
             self._leaf_rungs[key] = min(self.rung, leaf.num_rungs - 1)
@@ -176,6 +192,72 @@ class NestQuantStore:
             self.n = max((b[-1] for b in bits), default=8)
         if self.h is None:
             self.h = min((b[0] for b in bits), default=4)
+        # residency tier: the pager owns every non-resident delta stream.
+        # Default = InMemoryPager harvested from the input tree (classic
+        # everything-in-host-memory behavior); a FilePager pages from an
+        # on-disk artifact instead.  Establishing the INITIAL residency is
+        # not a switch: no ledger events.
+        if self.pager is None:
+            from ..storage.pager import InMemoryPager
+            self.pager = InMemoryPager.from_tree(self.nested_params)
+        for key in self._leaf_paths:
+            self._page_leaf(key, self._leaf_rungs[key])
+        self._rebuild_tree()
+
+    # -- residency plumbing ----------------------------------------------
+    def _rebuild_tree(self):
+        self.nested_params = jax.tree_util.tree_unflatten(
+            self._treedef, self._flat)
+
+    def _page_leaf(self, path: str, target: int) -> Tuple[int, int]:
+        """Move ONE leaf's residency to ``target`` delta levels through
+        the pager, one adjacent level at a time.  Returns the OBSERVED
+        (page_in, page_out) bytes, each level asserted equal to the
+        metadata-computed stream size - the executable version of the
+        Table-11 claim that a rung move touches exactly bytes(delta_k).
+
+        ATOMIC per leaf: a failed fetch (e.g. a delta segment not yet
+        delivered) evicts anything fetched so far and leaves the leaf,
+        the rung map, and the pager accounting untouched."""
+        i = self._leaf_index[path]
+        leaf: NestedTensor = self._flat[i]
+        cur = leaf.resident_levels
+        if cur == target:
+            self._leaf_rungs[path] = target
+            return (0, 0)
+        ds = list(leaf.deltas)
+        streams = self._leaf_streams[path]
+        obs_in = obs_out = 0
+        fetched = []
+        try:
+            while cur < target:
+                words = self.pager.fetch(path, cur)
+                fetched.append(cur)
+                got = int(words.size) * words.dtype.itemsize
+                if got != streams[1 + cur]:
+                    raise RuntimeError(
+                        f"pager returned {got} bytes for {path} delta {cur}; "
+                        f"metadata says bytes(delta_{cur}) = {streams[1 + cur]}")
+                ds[cur] = words
+                obs_in += got
+                cur += 1
+        except BaseException:
+            for lvl in fetched:
+                self.pager.evict(path, lvl)
+            raise
+        while cur > target:
+            cur -= 1
+            got = int(ds[cur].size) * ds[cur].dtype.itemsize
+            if got != streams[1 + cur]:
+                raise RuntimeError(
+                    f"resident stream {cur} of {path} holds {got} bytes; "
+                    f"metadata says bytes(delta_{cur}) = {streams[1 + cur]}")
+            self.pager.evict(path, cur)
+            ds[cur] = None
+            obs_out += got
+        self._flat[i] = leaf.with_deltas(tuple(ds))
+        self._leaf_rungs[path] = target
+        return (obs_in, obs_out)
 
     # -- byte accounting ------------------------------------------------
     def bytes(self) -> Dict[str, int]:
@@ -216,7 +298,8 @@ class NestQuantStore:
         return total
 
     def best_rung_for(self, memory_budget_bytes: Optional[int]) -> int:
-        """Highest uniform rung whose resident bytes fit the budget.
+        """Highest uniform rung whose resident bytes fit the budget AND
+        whose delta segments the pager can deliver (max_available_rung).
 
         Rung 0 is the FLOOR: the base stream is always resident, so a
         budget below even rung 0's bytes still returns 0 - the store
@@ -224,15 +307,31 @@ class NestQuantStore:
         service below the floor must compare rung_resident_bytes(0)
         themselves).  Residency is monotone in the rung, so the scan
         stops at the first rung that no longer fits."""
+        avail = self.max_available_rung()
         if memory_budget_bytes is None:
-            return self.num_rungs - 1
+            return avail
         want = 0
         for r in range(self.num_rungs):
             if self.rung_resident_bytes(r) <= memory_budget_bytes:
                 want = r
             else:
                 break
-        return want
+        return min(want, avail)
+
+    def max_available_rung(self) -> int:
+        """Highest uniform rung the pager can deliver RIGHT NOW.
+
+        With the default InMemoryPager this is always the top rung; with
+        a FilePager over a progressively delivered artifact it climbs as
+        delta segments arrive (DESIGN.md Sec. 10), so budget policies
+        transparently serve the best rung that has actually landed."""
+        for k in range(self.num_rungs - 1):
+            for path in self._leaf_paths:
+                if (k < len(self._leaf_streams[path]) - 1
+                        and self._leaf_rungs[path] <= k
+                        and not self.pager.available(path, k)):
+                    return k
+        return self.num_rungs - 1
 
     # -- per-leaf rung state ---------------------------------------------
     @property
@@ -263,11 +362,36 @@ class NestQuantStore:
         return dict(self._leaf_bits)
 
     def nested_leaves(self) -> List[Tuple[str, NestedTensor]]:
-        """(keystr path, NestedTensor) for every nested leaf, tree order."""
+        """(keystr path, NestedTensor) for every nested leaf, tree order,
+        at their CURRENT residency (non-resident delta slots are None)."""
         flat, _ = jax.tree_util.tree_flatten_with_path(
             self.nested_params, is_leaf=lambda x: isinstance(x, NestedTensor))
         return [(jax.tree_util.keystr(p), leaf) for p, leaf in flat
                 if isinstance(leaf, NestedTensor)]
+
+    def hydrated_leaves(self) -> List[Tuple[str, NestedTensor]]:
+        """Like :meth:`nested_leaves` but with EVERY delta level present,
+        paging missing streams through the pager transiently (residency
+        and ledger unchanged).  Off the serving path: quality probes and
+        offline export need the full ladder regardless of what is
+        resident; with a throttled pager the transfer cost is recorded."""
+        out = []
+        for path in self._leaf_paths:
+            leaf: NestedTensor = self._flat[self._leaf_index[path]]
+            missing = range(leaf.resident_levels, len(leaf.deltas))
+            if missing:
+                ds = list(leaf.deltas)
+                fetched = []
+                try:
+                    for i in missing:
+                        ds[i] = self.pager.fetch(path, i)
+                        fetched.append(i)
+                finally:            # transient: evict even on a failed fetch
+                    for i in fetched:
+                        self.pager.evict(path, i)
+                leaf = leaf.with_deltas(tuple(ds))
+            out.append((path, leaf))
+        return out
 
     def resolve_assignment(self, assignment: RungAssignment) -> Dict[str, int]:
         """Concrete per-leaf target rungs under ``assignment`` (clamped to
@@ -301,51 +425,82 @@ class NestQuantStore:
             self.to_rung(mode_to_rung(assignment.default, self.num_rungs))
         else:
             targets = self.resolve_assignment(assignment)
-            for path in self._leaf_paths:
-                cur, tgt = self._leaf_rungs[path], targets[path]
-                if tgt == cur:
-                    continue
-                deltas = self._leaf_streams[path][1:]
-                if tgt > cur:
-                    pin, pout = sum(deltas[cur:tgt]), 0
+            try:
+                for path in self._leaf_paths:
+                    cur, tgt = self._leaf_rungs[path], targets[path]
+                    if tgt == cur:
+                        continue
+                    pin, pout = self._page_leaf(path, tgt)
+                    self.ledger.record(page_in=pin, page_out=pout,
+                                       from_rung=cur, to_rung=tgt)
+            finally:
+                # a failed leaf move (undelivered segment) leaves that
+                # leaf untouched; re-derive the summary + serving tree so
+                # the store stays consistent with whatever DID move
+                uni = self._uniform_rung()
+                if uni is None:
+                    self.rung = min(self._leaf_rungs.values())
+                    self.mode = "mixed"
                 else:
-                    pin, pout = 0, sum(deltas[tgt:cur])
-                self.ledger.record(page_in=pin, page_out=pout,
-                                   from_rung=cur, to_rung=tgt)
-                self._leaf_rungs[path] = tgt
-            uni = self._uniform_rung()
-            if uni is None:
-                self.rung = min(self._leaf_rungs.values())
-                self.mode = "mixed"
-            else:
-                self.rung = uni
-                self.mode = rung_to_mode(uni, self.num_rungs)
+                    self.rung = uni
+                    self.mode = rung_to_mode(uni, self.num_rungs)
+                self._rebuild_tree()
         return {"page_in": self.ledger.page_in_bytes - before_in,
                 "page_out": self.ledger.page_out_bytes - before_out,
                 "moves": len(self.ledger.events) - before_ev}
 
     def to_rung(self, rung: int):
-        """Walk the whole tree one adjacent rung at a time, ledgering
-        exactly bytes(delta_k) per step (Table 11, K-rung).  From a MIXED
-        state this delegates to :meth:`apply` so each leaf's walk is
-        ledgered exactly."""
+        """Walk the whole tree one adjacent rung at a time, fetching /
+        evicting each leaf's level-k stream through the pager and
+        ledgering the OBSERVED bytes - asserted equal to the computed
+        bytes(delta_k) per step (Table 11, K-rung).  From a MIXED state
+        this delegates to :meth:`apply` so each leaf's walk is ledgered
+        exactly."""
         rung = mode_to_rung(rung, self.num_rungs)
         if self.is_mixed:
             self.apply(RungAssignment.uniform(rung))
             return self
         while self.rung < rung:
-            self.ledger.record(page_in=self.delta_bytes(self.rung), page_out=0,
-                               from_rung=self.rung, to_rung=self.rung + 1)
-            self.rung += 1
+            k = self.rung
+            obs = 0
+            moved = []
+            try:
+                for path in self._leaf_paths:
+                    if k < len(self._leaf_streams[path]) - 1:
+                        pin, _ = self._page_leaf(path, k + 1)
+                        moved.append(path)
+                        obs += pin
+                if obs != self.delta_bytes(k):
+                    raise RuntimeError(
+                        f"upgrade {k}->{k + 1} observed {obs} bytes moved; "
+                        f"computed bytes(delta_{k}) = {self.delta_bytes(k)}")
+            except BaseException:
+                # transactional step: a failed fetch (segment not yet
+                # delivered) undoes this step's page-ins so the store
+                # stays uniformly at rung k, consistent and serving
+                for path in moved:
+                    self._page_leaf(path, k)
+                self._rebuild_tree()
+                raise
+            self.ledger.record(page_in=obs, page_out=0,
+                               from_rung=k, to_rung=k + 1)
+            self.rung = k + 1
         while self.rung > rung:
-            self.ledger.record(page_in=0,
-                               page_out=self.delta_bytes(self.rung - 1),
-                               from_rung=self.rung, to_rung=self.rung - 1)
-            self.rung -= 1
+            k = self.rung - 1
+            obs = 0
+            for path in self._leaf_paths:
+                if k < len(self._leaf_streams[path]) - 1:
+                    _, pout = self._page_leaf(path, k)
+                    obs += pout
+            if obs != self.delta_bytes(k):
+                raise RuntimeError(
+                    f"downgrade {k + 1}->{k} observed {obs} bytes moved; "
+                    f"computed bytes(delta_{k}) = {self.delta_bytes(k)}")
+            self.ledger.record(page_in=0, page_out=obs,
+                               from_rung=k + 1, to_rung=k)
+            self.rung = k
         self.mode = rung_to_mode(self.rung, self.num_rungs)
-        for path in self._leaf_paths:
-            self._leaf_rungs[path] = min(
-                self.rung, len(self._leaf_streams[path]) - 1)
+        self._rebuild_tree()
         return self
 
     def to_full(self):

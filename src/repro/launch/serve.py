@@ -10,6 +10,12 @@
   # declarative per-layer recipe + dwell-window policy (DESIGN.md Sec. 9)
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
       --recipe examples/recipe.json --policy hysteresis
+
+  # storage tier (DESIGN.md Sec. 10): ship ONE artifact, boot from it
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+      --bits 8,6,4 --save-artifact /tmp/nest_artifact
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+      --artifact /tmp/nest_artifact --link-mbps 100
 """
 from __future__ import annotations
 
@@ -50,29 +56,63 @@ def main(argv=None):
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--budget-schedule", default="full,part,full",
                     help="comma list of full|part|rungK phases")
+    ap.add_argument("--save-artifact", default=None, metavar="DIR",
+                    help="quantize per --recipe/--bits, write a NestQuant "
+                         "artifact (DESIGN.md Sec. 10), and exit")
+    ap.add_argument("--artifact", default=None, metavar="DIR",
+                    help="cold-boot from a saved artifact: read manifest + "
+                         "base segment only, page deltas from disk on demand")
+    ap.add_argument("--link-mbps", type=float, default=None,
+                    help="with --artifact: simulate paging over an N Mbit/s "
+                         "link (ThrottledPager) and report transfer seconds")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.reduced()
-    model = make_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    if args.recipe:
-        with open(args.recipe) as f:
-            recipe = QuantRecipe.from_json(f.read())
-    elif args.bits:
-        recipe = QuantRecipe(bits=tuple(int(x) for x in args.bits.split(",")))
-    else:
-        recipe = QuantRecipe(bits=(args.h, args.n))
-    nested = quantize(params, recipe)
-    if args.recipe:
-        print("[recipe] per-leaf ladders:")
-        print(recipe_summary(nested))
-    store = NestQuantStore(nested, mode="part", dtype=jax.numpy.float32)
     pkw = ({"dwell": args.dwell} if args.policy == "hysteresis" else
            {"floor": args.quality_floor} if args.policy == "quality" else {})
-    engine = ServeEngine(cfg, store, max_batch=args.requests, max_len=64,
-                         policy=make_policy(args.policy, **pkw))
+
+    if args.artifact:
+        from ..api import FilePager, ThrottledPager, open_artifact
+        art = open_artifact(args.artifact)
+        pager = FilePager(art)
+        if args.link_mbps:
+            pager = ThrottledPager(pager,
+                                   bandwidth_bytes_per_s=args.link_mbps * 125e3)
+        engine = ServeEngine.from_artifact(
+            cfg, art, pager=pager, max_batch=args.requests, max_len=64,
+            dtype=jax.numpy.float32, policy=make_policy(args.policy, **pkw))
+        store = engine.store
+        print(f"[artifact] cold boot read "
+              f"{sum(art.bytes_read.values())/1e6:.2f}MB "
+              f"(manifest+base) of {art.total_nbytes()/1e6:.2f}MB total; "
+              f"serving at mode={store.mode}")
+    else:
+        model = make_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        if args.recipe:
+            with open(args.recipe) as f:
+                recipe = QuantRecipe.from_json(f.read())
+        elif args.bits:
+            recipe = QuantRecipe(
+                bits=tuple(int(x) for x in args.bits.split(",")))
+        else:
+            recipe = QuantRecipe(bits=(args.h, args.n))
+        nested = quantize(params, recipe)
+        if args.recipe:
+            print("[recipe] per-leaf ladders:")
+            print(recipe_summary(nested))
+        if args.save_artifact:
+            from ..api import save_artifact
+            manifest = save_artifact(nested, args.save_artifact, recipe=recipe)
+            for name, seg in manifest["segments"].items():
+                print(f"[artifact] {seg['file']}: {seg['nbytes']/1e6:.2f}MB")
+            print(f"[artifact] wrote {args.save_artifact}")
+            return
+        store = NestQuantStore(nested, mode="part", dtype=jax.numpy.float32)
+        engine = ServeEngine(cfg, store, max_batch=args.requests, max_len=64,
+                             policy=make_policy(args.policy, **pkw))
 
     b = store.bytes()
     need = [store.rung_resident_bytes(r) for r in range(store.num_rungs)]
@@ -103,6 +143,10 @@ def main(argv=None):
               f"switches={store.ledger.switches}")
     red = store.switch_reduction()
     print(f"[switching] overhead reduction vs diverse-bitwidths: {red:.1%}")
+    if args.artifact and args.link_mbps:
+        print(f"[link] paged {pager.bytes_moved/1e6:.2f}MB over a "
+              f"{args.link_mbps:g} Mbit/s link: "
+              f"{pager.simulated_seconds:.2f}s simulated transfer")
 
 
 if __name__ == "__main__":

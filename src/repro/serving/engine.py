@@ -66,10 +66,58 @@ class ServeEngine:
         self.max_len = max_len
         self.policy = policy if policy is not None else BudgetPolicy()
         self.stats = EngineStats()
+        self.artifact = None          # set by from_artifact
         self._tracker = SignalTracker()
         self._params = None
         self._prefill = jax.jit(self.model.prefill)
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,))
+
+    # -- deployment --------------------------------------------------------
+    @classmethod
+    def from_artifact(cls, cfg: ModelConfig, path, *, pager=None,
+                      policy: Optional[RungPolicy] = None, max_batch: int = 8,
+                      max_len: int = 128, dtype=jnp.bfloat16,
+                      verify: bool = True) -> "ServeEngine":
+        """Cold-boot from a saved artifact (DESIGN.md Sec. 10).
+
+        Reads ONLY ``manifest.json`` + the base segment and serves at
+        rung 0 immediately; delta streams page in through the pager
+        (default: a :class:`~repro.storage.pager.FilePager` over the same
+        artifact) - on a budget upgrade, or rung-by-rung via
+        :meth:`poll_delivery` as delta segments arrive on disk."""
+        from ..storage.artifact import Artifact, open_artifact
+        from ..storage.pager import FilePager
+        art = path if isinstance(path, Artifact) else open_artifact(path)
+        store = NestQuantStore(
+            art.load_base_tree(), mode="part", dtype=dtype,
+            pager=pager if pager is not None else FilePager(art, verify=verify))
+        eng = cls(cfg, store, max_batch=max_batch, max_len=max_len,
+                  policy=policy)
+        eng.artifact = art
+        return eng
+
+    def poll_delivery(self) -> Dict[str, object]:
+        """Progressive rung delivery: climb one adjacent rung at a time
+        while the pager has the next delta level available (the paper's
+        "page in lower-bit weights when resources allow" as a control
+        loop).  Call it whenever the transport may have delivered more
+        segments; serving keeps working between polls at whatever rung
+        has landed.  Returns {'from_rung', 'rung', 'modes', 'page_in'}
+        for this poll alone (page_in = observed bytes, ledgered)."""
+        start = self.store.rung
+        in0 = self.store.ledger.page_in_bytes
+        reached: List[str] = []
+        while (self.store.rung < self.store.num_rungs - 1
+               and self.store.max_available_rung() > self.store.rung):
+            self.store.to_rung(self.store.rung + 1)
+            self.stats.switches += 1
+            self.stats.record_mode(self.store.mode)
+            reached.append(self.store.mode)
+        if reached:
+            self._params = self.store.params()
+        return {"from_rung": start, "rung": self.store.rung,
+                "modes": reached,
+                "page_in": self.store.ledger.page_in_bytes - in0}
 
     # -- switching ---------------------------------------------------------
     def ensure_mode(self, memory_budget_bytes: Optional[int] = None,

@@ -130,7 +130,9 @@ class QualityFloorPolicy:
         self._cache = {k: v for k, v in self._cache.items()
                        if v[0]() is not None}
         qual: Dict[str, Tuple[float, ...]] = {}
-        for path, leaf in store.nested_leaves():
+        # hydrated: quality is judged against the FULL ladder, so streams
+        # currently paged out are fetched transiently through the pager
+        for path, leaf in store.hydrated_leaves():
             full = np.asarray(leaf.full_bit(np.float32))
             scores = []
             for r in range(leaf.num_rungs - 1):
@@ -161,6 +163,13 @@ class QualityFloorPolicy:
     def decide(self, store: NestQuantStore,
                signal: ResourceSignal) -> RungAssignment:
         want = self.inner.decide(store, signal)
+        # quality floors are judged against the FULL ladder; while an
+        # artifact is still being delivered (some delta segments absent)
+        # neither the full-bit reference nor the raised rungs could be
+        # paged in, so pass the inner decision through and start flooring
+        # once everything has landed
+        if store.max_available_rung() < store.num_rungs - 1:
+            return want
         floors = self.floor_rungs(store)
         tgt = store.resolve_assignment(want)
         raised = {p: max(r, floors[p]) for p, r in tgt.items()}

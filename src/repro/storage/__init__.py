@@ -1,0 +1,5 @@
+"""Storage/transport tier: artifacts, delta pagers, progressive delivery
+(DESIGN.md Sec. 10)."""
+from .artifact import (Artifact, ArtifactError, load_store, open_artifact,
+                       save_artifact)
+from .pager import DeltaPager, FilePager, InMemoryPager, ThrottledPager

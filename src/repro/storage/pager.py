@@ -1,0 +1,201 @@
+"""Pluggable delta pagers (DESIGN.md Sec. 10).
+
+Before the storage tier existed, every delta stream of every leaf was
+resident in host memory forever and "paging" was ledger arithmetic.  A
+:class:`DeltaPager` owns the NON-RESIDENT delta streams instead: the
+:class:`~repro.core.switching.NestQuantStore` calls ``fetch(path, level)``
+on upgrade (the returned packed words become resident in the serving
+tree) and ``evict(path, level)`` on downgrade, so the ledger records
+bytes that were *observed* to move through the pager - asserted equal to
+the metadata-computed ``bytes(delta_k)``.
+
+Shipped pagers:
+
+* :class:`InMemoryPager` - every stream held in host memory (exactly the
+  pre-storage-tier behavior; the default when a store is built from an
+  in-memory tree).
+* :class:`FilePager` - streams read on demand from a saved artifact
+  (storage.artifact), CRC-checked per array.  ``available`` is true once
+  the segment file exists on disk, which is how progressive delivery
+  observes delta segments "arriving" on the device.
+* :class:`ThrottledPager` - wraps any pager with a simulated link
+  (bandwidth + latency), so switching/transport benchmarks measure real
+  byte movement instead of assuming it is free.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+
+@runtime_checkable
+class DeltaPager(Protocol):
+    """Owner of the non-resident delta streams of one nested model.
+
+    ``path`` is the pytree key string (``jax.tree_util.keystr``) of a
+    nested leaf and ``level`` the delta-stream index (level k upgrades
+    rung k to rung k+1)."""
+
+    def fetch(self, path: str, level: int) -> jax.Array:
+        """Return the packed int32 words of one delta stream."""
+        ...
+
+    def evict(self, path: str, level: int) -> None:
+        """Drop a previously fetched stream from device/host residency."""
+        ...
+
+    def resident_bytes(self) -> int:
+        """Bytes the pager itself currently holds in host memory."""
+        ...
+
+    def available(self, path: str, level: int) -> bool:
+        """Whether ``fetch(path, level)`` would succeed right now."""
+        ...
+
+
+class InMemoryPager:
+    """All delta streams pinned in host memory - the classic behavior.
+
+    ``evict`` is a residency no-op (the bytes stay in host RAM, exactly
+    as before the storage tier existed); ``fetch`` hands back the very
+    same array object, so a page-out/page-in round trip is bit-identical
+    by construction."""
+
+    def __init__(self, streams: Optional[Dict[Tuple[str, int], jax.Array]] = None):
+        self._streams: Dict[Tuple[str, int], jax.Array] = dict(streams or {})
+
+    @classmethod
+    def from_tree(cls, nested_params) -> "InMemoryPager":
+        """Harvest every present delta stream of a nested pytree."""
+        from ..core.nesting import NestedTensor
+
+        flat, _ = jax.tree_util.tree_flatten_with_path(
+            nested_params, is_leaf=lambda x: isinstance(x, NestedTensor))
+        streams = {}
+        for path, leaf in flat:
+            if not isinstance(leaf, NestedTensor):
+                continue
+            key = jax.tree_util.keystr(path)
+            for i, d in enumerate(leaf.deltas):
+                if d is not None:
+                    streams[(key, i)] = d
+        return cls(streams)
+
+    def fetch(self, path: str, level: int) -> jax.Array:
+        try:
+            return self._streams[(path, level)]
+        except KeyError:
+            raise KeyError(
+                f"no delta stream (level {level}) for {path!r} in the "
+                "in-memory pager - was the store built from a base-only "
+                "tree without a FilePager?") from None
+
+    def evict(self, path: str, level: int) -> None:
+        pass                        # host copy stays: the classic behavior
+
+    def resident_bytes(self) -> int:
+        return sum(int(a.size) * a.dtype.itemsize
+                   for a in self._streams.values())
+
+    def available(self, path: str, level: int) -> bool:
+        return (path, level) in self._streams
+
+
+class FilePager:
+    """Delta streams read on demand from a saved artifact directory.
+
+    Each ``fetch`` reads exactly one array's byte range from the delta
+    segment file (CRC-checked); ``resident_bytes`` counts only the
+    streams currently fetched and not yet evicted.  A segment file that
+    does not exist yet is simply *not available* - progressive delivery
+    (``ServeEngine.poll_delivery``) upgrades as files arrive."""
+
+    def __init__(self, artifact, verify: bool = True):
+        from .artifact import Artifact, open_artifact
+        self.artifact: Artifact = (artifact if isinstance(artifact, Artifact)
+                                   else open_artifact(artifact))
+        self.verify = verify
+        self._resident: Dict[Tuple[str, int], int] = {}
+        self._landed: set = set()       # segments seen on disk (stay there)
+
+    def _spec(self, path: str, level: int) -> dict:
+        entry = self.artifact.leaf(path)
+        deltas = entry["arrays"].get("deltas", ())
+        if not 0 <= level < len(deltas):
+            raise KeyError(f"{path!r} has no delta level {level} "
+                           f"({len(deltas)} streams in the artifact)")
+        return deltas[level]
+
+    def fetch(self, path: str, level: int) -> jax.Array:
+        spec = self._spec(path, level)
+        arr = self.artifact.read_array(spec, verify=self.verify)
+        self._resident[(path, level)] = spec["nbytes"]
+        return jnp.asarray(arr)
+
+    def evict(self, path: str, level: int) -> None:
+        self._resident.pop((path, level), None)
+
+    def resident_bytes(self) -> int:
+        return sum(self._resident.values())
+
+    def available(self, path: str, level: int) -> bool:
+        try:
+            spec = self._spec(path, level)
+        except KeyError:
+            return False
+        # availability is a SEGMENT property and segments never un-arrive,
+        # so cache positives: max_available_rung probes every (leaf, level)
+        # on the serving path and must not stat the same file per leaf
+        seg = spec["segment"]
+        if seg in self._landed:
+            return True
+        if self.artifact.segment_available(seg):
+            self._landed.add(seg)
+            return True
+        return False
+
+
+class ThrottledPager:
+    """Simulated-link wrapper: every fetch pays ``latency_s`` plus
+    ``nbytes / bandwidth_bytes_per_s`` of virtual transfer time, recorded
+    in :attr:`transfers` / :attr:`simulated_seconds` (and really slept
+    when ``sleep=True``).  Evictions are free - dropping residency moves
+    no bytes over the link.  Lets switching-overhead benchmarks report
+    byte movement on a concrete link instead of assuming it is free."""
+
+    def __init__(self, inner: DeltaPager,
+                 bandwidth_bytes_per_s: float = 12.5e6,   # 100 Mbit/s
+                 latency_s: float = 0.0, sleep: bool = False):
+        if bandwidth_bytes_per_s <= 0:
+            raise ValueError("bandwidth must be > 0")
+        self.inner = inner
+        self.bandwidth_bytes_per_s = float(bandwidth_bytes_per_s)
+        self.latency_s = float(latency_s)
+        self.sleep = sleep
+        self.bytes_moved = 0
+        self.simulated_seconds = 0.0
+        # (path, level, nbytes, seconds) per fetch, arrival order
+        self.transfers: List[Tuple[str, int, int, float]] = []
+
+    def fetch(self, path: str, level: int) -> jax.Array:
+        arr = self.inner.fetch(path, level)
+        nb = int(arr.size) * arr.dtype.itemsize
+        dt = self.latency_s + nb / self.bandwidth_bytes_per_s
+        self.bytes_moved += nb
+        self.simulated_seconds += dt
+        self.transfers.append((path, level, nb, dt))
+        if self.sleep:
+            time.sleep(dt)
+        return arr
+
+    def evict(self, path: str, level: int) -> None:
+        self.inner.evict(path, level)
+
+    def resident_bytes(self) -> int:
+        return self.inner.resident_bytes()
+
+    def available(self, path: str, level: int) -> bool:
+        return self.inner.available(path, level)

@@ -1,0 +1,311 @@
+"""Storage tier tests (DESIGN.md Sec. 10): artifact round-trip
+bit-exactness, checksum rejection, pager-ledger equality, metadata byte
+accounting, and cold-boot progressive delivery."""
+import json
+import os
+import shutil
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.api import (Artifact, ArtifactError, FilePager, InMemoryPager,
+                       LayerOverride, QuantRecipe, Request, RungAssignment,
+                       ServeEngine, ThrottledPager, load_store, open_artifact,
+                       quantize, save_artifact)
+from repro.configs import get_config
+from repro.core import NestQuantStore
+from repro.core.nesting import NestedTensor, nest_quantize
+from repro.models import make_model
+
+RECIPE = QuantRecipe(bits=(8, 4), overrides=(
+    LayerOverride(pattern=r"\['deep'\]", bits=(8, 6, 4)),
+    LayerOverride(pattern=r"\['emb'\]", dense=True),
+))
+
+
+@pytest.fixture(scope="module")
+def tree():
+    """Small mixed tree: per-layer ladders + a dense leaf + an fp scalar
+    vector (recipe predicate keeps it dense)."""
+    k = jax.random.PRNGKey(0)
+    params = {
+        "deep": {"w": jax.random.normal(k, (256, 96))},
+        "shallow": {"w": jax.random.normal(jax.random.PRNGKey(1), (192, 96))},
+        "emb": jax.random.normal(jax.random.PRNGKey(2), (128, 96)),
+        "norm": {"scale": jnp.ones((96,), jnp.float32)},
+    }
+    return quantize(params, RECIPE)
+
+
+@pytest.fixture()
+def art_dir(tree, tmp_path):
+    path = str(tmp_path / "artifact")
+    save_artifact(tree, path, recipe=RECIPE)
+    return path
+
+
+def _nested_items(t):
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        t, is_leaf=lambda x: isinstance(x, NestedTensor))
+    return [(jax.tree_util.keystr(p), leaf) for p, leaf in flat]
+
+
+# ---------------------------------------------------------------------------
+# artifact round trip
+# ---------------------------------------------------------------------------
+def test_artifact_roundtrip_bit_exact(tree, art_dir):
+    """Integer codes and packed words identical at EVERY rung after a
+    save -> cold boot -> page-all-levels round trip."""
+    store = load_store(art_dir, mode="part")
+    store.to_full()
+    for (pa, la), (pb, lb) in zip(_nested_items(tree),
+                                  _nested_items(store.nested_params)):
+        assert pa == pb
+        if not isinstance(la, NestedTensor):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+            assert np.asarray(la).dtype == np.asarray(lb).dtype
+            continue
+        assert (la.bits, la.block, la.shape) == (lb.bits, lb.block, lb.shape)
+        np.testing.assert_array_equal(np.asarray(la.w_base),
+                                      np.asarray(lb.w_base))
+        np.testing.assert_array_equal(np.asarray(la.scale),
+                                      np.asarray(lb.scale))
+        for da, db in zip(la.deltas, lb.deltas):
+            np.testing.assert_array_equal(np.asarray(da), np.asarray(db))
+        for r in range(la.num_rungs):            # integer codes per rung
+            np.testing.assert_array_equal(np.asarray(la.codes_at(r)),
+                                          np.asarray(lb.codes_at(r)))
+
+
+def test_artifact_recipe_and_manifest(art_dir, tree):
+    art = open_artifact(art_dir)
+    assert art.recipe().bits == RECIPE.bits
+    assert [o.pattern for o in art.recipe().overrides] == \
+        [o.pattern for o in RECIPE.overrides]
+    # segment sizes in the manifest match the files on disk
+    for name in art.manifest["segments"]:
+        assert os.path.getsize(art.segment_path(name)) == \
+            art.segment_nbytes(name)
+    # delta segment k holds exactly the tree-wide bytes(delta_k)
+    store = NestQuantStore(tree, mode="part")
+    for k in range(store.num_rungs - 1):
+        assert art.segment_nbytes(art.delta_segment(k)) == \
+            store.delta_bytes(k)
+
+
+def test_cold_boot_reads_only_manifest_and_base(art_dir):
+    art = open_artifact(art_dir)
+    art.load_base_tree()
+    assert art.segments_read == {"base"}
+    assert art.bytes_read["base"] == art.segment_nbytes("base")
+
+
+def test_corrupted_segment_rejected(art_dir):
+    def corrupt(seg_file):
+        p = os.path.join(art_dir, seg_file)
+        raw = bytearray(open(p, "rb").read())
+        raw[len(raw) // 2] ^= 0xFF
+        open(p, "wb").write(bytes(raw))
+
+    corrupt("delta_0.seg")
+    pager = FilePager(open_artifact(art_dir))
+    with pytest.raises(ArtifactError, match="CRC-32"):
+        store = load_store(art_dir, pager=pager)
+        store.to_rung(1)
+    corrupt("base.seg")
+    with pytest.raises(ArtifactError, match="SHA-256"):
+        open_artifact(art_dir).load_base_tree()
+
+
+def test_save_rejects_paged_out_tree(tree, tmp_path):
+    store = NestQuantStore(tree, mode="part")   # deltas live in the pager
+    with pytest.raises(ArtifactError, match="paged out"):
+        save_artifact(store.nested_params, str(tmp_path / "nope"))
+
+
+# ---------------------------------------------------------------------------
+# pagers and the ledger
+# ---------------------------------------------------------------------------
+def _drive(store):
+    store.to_full()
+    store.to_part()
+    store.apply(RungAssignment(default=0, overrides=((r"\['deep'\]", -1),)))
+    store.apply(RungAssignment(default=0))
+    return store.ledger
+
+
+def test_filepager_matches_inmemory_ledger_exactly(tree, art_dir):
+    """The same switching schedule over an InMemoryPager (classic
+    host-resident behavior) and a FilePager (bytes actually read from
+    disk) must produce IDENTICAL ledgers - observed == computed."""
+    mem = _drive(NestQuantStore(tree, mode="part"))
+    fil = _drive(load_store(art_dir, mode="part"))
+    assert mem.events == fil.events
+    assert (mem.page_in_bytes, mem.page_out_bytes, mem.switches) == \
+        (fil.page_in_bytes, fil.page_out_bytes, fil.switches)
+
+
+def test_filepager_resident_bytes_track_residency(tree, art_dir):
+    store = load_store(art_dir, mode="part")
+    pager = store.pager
+    assert pager.resident_bytes() == 0          # nothing fetched at boot
+    store.to_full()
+    assert pager.resident_bytes() == sum(
+        store.delta_bytes(k) for k in range(store.num_rungs - 1))
+    store.to_part()
+    assert pager.resident_bytes() == 0          # evicted on downgrade
+
+
+def test_throttled_pager_accounts_link_time(tree, art_dir):
+    link = ThrottledPager(FilePager(open_artifact(art_dir)),
+                          bandwidth_bytes_per_s=1e6, latency_s=0.5)
+    store = load_store(art_dir, pager=link)
+    store.to_full()
+    total = sum(store.delta_bytes(k) for k in range(store.num_rungs - 1))
+    assert link.bytes_moved == total
+    expect = sum(0.5 + nb / 1e6 for (_, _, nb, _) in link.transfers)
+    assert link.simulated_seconds == pytest.approx(expect)
+    assert link.simulated_seconds >= 0.5 * len(link.transfers)
+
+
+def test_metadata_byte_accounting_equals_array_sizes():
+    """nbytes_* are computed from (shape, bits, block) so paged-out
+    leaves account exactly; they must equal the real packed array sizes
+    across ladders, roundings, and non-dividing blocks."""
+    w = jax.random.normal(jax.random.PRNGKey(3), (200, 64))
+    for bits in ((4, 8), (8, 6, 4), (8, 6, 5, 4)):
+        for block in (None, 32, 64):
+            nt = nest_quantize(w, bits=bits, block=block, rounding="rtn")
+            assert nt.nbytes_base() == int(np.prod(nt.w_base.shape)) * 4
+            for i, d in enumerate(nt.deltas):
+                assert nt.nbytes_delta(i) == int(np.prod(d.shape)) * 4
+            assert nt.nbytes_scales() == int(np.prod(nt.scale.shape)) * 4
+
+
+def test_quality_policy_hydrates_through_pager(tree, art_dir):
+    """QualityFloorPolicy needs the full ladder; with a FilePager the
+    missing streams are fetched transiently without changing residency."""
+    from repro.api import QualityFloorPolicy, ResourceSignal
+    store = load_store(art_dir, mode="part")
+    pol = QualityFloorPolicy(floor=200.0)       # unreachable: pins top rungs
+    asg = pol.decide(store, ResourceSignal(memory_budget_bytes=0))
+    assert store.rung == 0                       # residency unchanged
+    assert store.pager.resident_bytes() == 0     # transient fetches evicted
+    assert all(r == len(store.leaf_bits()[p]) - 1
+               for p, r in store.resolve_assignment(asg).items())
+
+
+@pytest.fixture()
+def staged_dir(art_dir, tmp_path):
+    """Partially delivered copy of the artifact: manifest + base +
+    delta_0 present, delta_1 still in flight."""
+    stage = str(tmp_path / "stage")
+    os.makedirs(stage)
+    for f in ("manifest.json", "base.seg", "delta_0.seg"):
+        shutil.copy(os.path.join(art_dir, f), stage)
+    return stage
+
+
+def test_failed_upgrade_rolls_back_to_consistent_state(staged_dir, art_dir):
+    """to_full against a partially delivered artifact fails on the
+    missing segment but must leave the store uniformly at the last
+    completed rung, ledger/pager/serving tree all consistent."""
+    store = load_store(staged_dir, mode="part")
+    with pytest.raises(ArtifactError, match="not delivered"):
+        store.to_full()
+    assert store.rung == 1 and not store.is_mixed       # 0->1 completed
+    assert [e[:2] for e in store.ledger.events] == [(0, 1)]
+    assert store.pager.resident_bytes() == store.delta_bytes(0)
+    assert store.max_available_rung() == 1
+    leaves = dict(store.nested_leaves())                # tree matches rungs
+    for path, r in store.leaf_rungs().items():
+        assert leaves[path].resident_levels == r
+    store.params()                                      # still serves
+    # once the segment lands, the same climb completes exactly
+    shutil.copy(os.path.join(art_dir, "delta_1.seg"), staged_dir)
+    store.to_full()
+    assert store.mode == "full"
+    assert [e[:2] for e in store.ledger.events] == [(0, 1), (1, 2)]
+
+
+def test_quality_policy_passes_through_until_delivered(staged_dir):
+    """QualityFloorPolicy must not crash (or raise rungs it cannot page)
+    while delta segments are still arriving: it defers to the inner
+    policy, which is clamped to max_available_rung."""
+    from repro.api import QualityFloorPolicy, ResourceSignal
+    store = load_store(staged_dir, mode="part")
+    pol = QualityFloorPolicy(floor=200.0)
+    asg = pol.decide(store, ResourceSignal(memory_budget_bytes=None))
+    store.apply(asg)                    # pages only what has landed
+    assert store.rung == store.max_available_rung() == 1
+
+
+# ---------------------------------------------------------------------------
+# progressive delivery (cold boot -> rung-by-rung upgrades)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def model_artifact(tmp_path_factory):
+    cfg = get_config("qwen2-1.5b").reduced()
+    params = make_model(cfg).init(jax.random.PRNGKey(0))
+    nested = quantize(params, QuantRecipe(bits=(8, 6, 4)))
+    path = str(tmp_path_factory.mktemp("deploy") / "artifact")
+    save_artifact(nested, path)
+    return cfg, path
+
+
+def test_progressive_delivery_cold_boot(model_artifact, tmp_path):
+    """Boot from manifest + base only; serve at rung 0; upgrade rung-by-
+    rung as delta segments arrive, each paging exactly bytes(delta_k)."""
+    cfg, full_dir = model_artifact
+    stage = str(tmp_path / "staged")
+    os.makedirs(stage)
+    shutil.copy(os.path.join(full_dir, "manifest.json"), stage)
+    shutil.copy(os.path.join(full_dir, "base.seg"), stage)
+
+    eng = ServeEngine.from_artifact(cfg, stage, max_batch=2, max_len=32,
+                                    dtype=jnp.float32)
+    art, store = eng.artifact, eng.store
+    assert store.mode == "part" and store.rung == 0
+    assert art.segments_read == {"base"}        # the cold-boot contract
+
+    rng = np.random.default_rng(0)
+    mk = lambda: [Request(i, rng.integers(0, cfg.vocab_size, 4)
+                          .astype(np.int32), max_new_tokens=1)
+                  for i in range(2)]
+    reqs = eng.generate(mk())                   # serves IMMEDIATELY at base
+    assert all(len(r.out_tokens) == 1 for r in reqs)
+    assert store.rung == 0                      # nothing to upgrade to yet
+    assert eng.poll_delivery()["modes"] == []   # no segments delivered
+
+    modes, per_upgrade = [], []
+    for k in range(store.num_rungs - 1):        # segments "arrive" one by one
+        shutil.copy(os.path.join(full_dir, f"delta_{k}.seg"), stage)
+        rep = eng.poll_delivery()
+        modes += rep["modes"]
+        per_upgrade.append(rep["page_in"])
+        assert rep["page_in"] == store.delta_bytes(k)   # exact bytes-on-wire
+        reqs = eng.generate(mk())               # serving works at every stage
+        assert all(len(r.out_tokens) == 1 for r in reqs)
+    assert modes == ["rung1", "full"]           # base -> ... -> full
+    assert [e[:2] for e in store.ledger.events] == [(0, 1), (1, 2)]
+    assert store.ledger.page_in_bytes == sum(per_upgrade)
+
+
+def test_from_artifact_matches_direct_quantize(model_artifact):
+    """A store booted from the artifact serves the same packed weights as
+    one built from the in-memory tree: prefill logits identical."""
+    cfg, full_dir = model_artifact
+    eng = ServeEngine.from_artifact(cfg, full_dir, max_batch=2, max_len=32,
+                                    dtype=jnp.float32)
+    eng.poll_delivery()                          # everything is on disk
+    assert eng.store.mode == "full"
+    params = make_model(cfg).init(jax.random.PRNGKey(0))
+    nested = quantize(params, QuantRecipe(bits=(8, 6, 4)))
+    direct = NestQuantStore(nested, mode="full", dtype=jnp.float32)
+    toks = {"tokens": jnp.zeros((1, 8), jnp.int32)}
+    model = make_model(cfg)
+    la, _ = jax.jit(model.prefill)(eng.store.params(), toks)
+    lb, _ = jax.jit(model.prefill)(direct.params(), toks)
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
