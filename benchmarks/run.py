@@ -23,8 +23,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_cliff, bench_kernels, bench_nesting_quality,
-                   bench_numerical_errors, bench_similarity, bench_storage,
-                   bench_switching, bench_transport, roofline)
+                   bench_numerical_errors, bench_serving, bench_similarity,
+                   bench_storage, bench_switching, bench_transport, roofline)
     suites = [
         ("table7_numerical_errors", bench_numerical_errors.run),
         ("table4_5_similarity", bench_similarity.run),
@@ -33,6 +33,7 @@ def main() -> None:
         ("table8_9_10_storage", bench_storage.run),
         ("table11_switching", bench_switching.run),
         ("transport", bench_transport.run),
+        ("serving", bench_serving.run),
         ("kernels", bench_kernels.run),
         ("roofline", roofline.run),
     ]

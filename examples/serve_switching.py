@@ -84,6 +84,31 @@ def main():
         print(f"  {name:10s}: {r['switches']} switches, "
               f"{paged:.2f}MB paged, modes {r['modes']}")
 
+    # -- serving under load (DESIGN.md Sec. 11) ----------------------------
+    # The budget scenarios above hand-synthesize every signal; here real
+    # traffic drives the rungs instead: an open-loop burst overloads even
+    # the top rung, the LoadAdaptivePolicy downshifts for throughput, and
+    # the drained queue climbs the ladder back - a fixed full-bit
+    # deployment eats the whole backlog in its p95 instead.
+    from repro.api import (LoadAdaptivePolicy, LoadGenerator, Scheduler,
+                           ServiceModel, StaticRungPolicy, calibrate_qps)
+    svc = ServiceModel()
+    probe = NestQuantStore(nested, mode="full", dtype=jnp.float32)
+    qps = calibrate_qps(probe, svc, steps=2, max_batch=8, utilization=0.4)
+    burst = 1.05 * svc.capacity_rps(probe.rung_resident_bytes(0), 2, 8)
+    print(f"\nburst trace: {qps:.0f} req/s steady, {burst:.0f} req/s burst")
+    for label, policy in (
+            ("static full", StaticRungPolicy(-1)),
+            ("adaptive", HysteresisPolicy(LoadAdaptivePolicy(high_depth=8),
+                                          dwell=2))):
+        st = NestQuantStore(nested, mode="full", dtype=jnp.float32)
+        eng = ServeEngine(cfg, st, max_batch=8, max_len=32, policy=policy)
+        trace = LoadGenerator("burst", qps=qps, n_requests=200,
+                              vocab_size=cfg.vocab_size, seed=0,
+                              new_tokens=2, burst_qps=burst,
+                              burst_window=(0.25, 0.7))
+        print(f"  {label:12s}: " + Scheduler(eng, trace, svc).run().table())
+
 
 if __name__ == "__main__":
     main()

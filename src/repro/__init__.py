@@ -15,9 +15,12 @@ _API = (
     "NestQuantStore", "RungAssignment", "SwitchLedger",
     "diverse_ladder_bytes",
     "RungPolicy", "BudgetPolicy", "HysteresisPolicy", "QualityFloorPolicy",
+    "LoadAdaptivePolicy", "StaticRungPolicy",
     "ResourceSignal", "SignalTracker", "POLICIES", "make_policy",
     "simulate_policy",
     "ServeEngine", "Request", "EngineStats",
+    "Scheduler", "SchedulerReport", "ScheduledRequest", "LoadGenerator",
+    "ServiceModel", "calibrate_qps",
     "save_artifact", "open_artifact", "load_store", "Artifact",
     "ArtifactError", "DeltaPager", "InMemoryPager", "FilePager",
     "ThrottledPager",

@@ -30,8 +30,11 @@ from .core.switching import (NestQuantStore, RungAssignment, SwitchLedger,
 from .models import make_model
 from .serving.engine import EngineStats, Request, ServeEngine
 from .serving.policies import (POLICIES, BudgetPolicy, HysteresisPolicy,
-                               QualityFloorPolicy, ResourceSignal, RungPolicy,
-                               SignalTracker, make_policy, simulate_policy)
+                               LoadAdaptivePolicy, QualityFloorPolicy,
+                               ResourceSignal, RungPolicy, SignalTracker,
+                               StaticRungPolicy, make_policy, simulate_policy)
+from .serving.scheduler import (LoadGenerator, ScheduledRequest, Scheduler,
+                                SchedulerReport, ServiceModel, calibrate_qps)
 from .storage import (Artifact, ArtifactError, DeltaPager, FilePager,
                       InMemoryPager, ThrottledPager, load_store,
                       open_artifact, save_artifact)
@@ -47,10 +50,14 @@ __all__ = [
     "diverse_ladder_bytes",
     # policies
     "RungPolicy", "BudgetPolicy", "HysteresisPolicy", "QualityFloorPolicy",
+    "LoadAdaptivePolicy", "StaticRungPolicy",
     "ResourceSignal", "SignalTracker", "POLICIES", "make_policy",
     "simulate_policy",
     # serving
     "ServeEngine", "Request", "EngineStats",
+    # load-adaptive scheduling (DESIGN.md Sec. 11)
+    "Scheduler", "SchedulerReport", "ScheduledRequest", "LoadGenerator",
+    "ServiceModel", "calibrate_qps",
     # storage tier (artifacts + pagers, DESIGN.md Sec. 10)
     "save_artifact", "open_artifact", "load_store", "Artifact",
     "ArtifactError", "DeltaPager", "InMemoryPager", "FilePager",

@@ -361,6 +361,13 @@ class NestQuantStore:
         """Per-leaf ladder bitwidths (keystr path -> ascending bits)."""
         return dict(self._leaf_bits)
 
+    def leaf_streams(self) -> Dict[str, Tuple[int, ...]]:
+        """Per-leaf packed stream sizes (keystr path -> (base bytes,
+        delta_0 bytes, ...)), metadata-computed once at construction -
+        what external accounting (e.g. the serving Scheduler's per-switch
+        exactness checks) should read instead of re-deriving."""
+        return dict(self._leaf_streams)
+
     def nested_leaves(self) -> List[Tuple[str, NestedTensor]]:
         """(keystr path, NestedTensor) for every nested leaf, tree order,
         at their CURRENT residency (non-resident delta slots are None)."""

@@ -16,6 +16,11 @@
       --bits 8,6,4 --save-artifact /tmp/nest_artifact
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
       --artifact /tmp/nest_artifact --link-mbps 100
+
+  # load-adaptive serving (DESIGN.md Sec. 11): schedule a 200-request
+  # burst trace; the engine downshifts under backlog and climbs back
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+      --bits 8,6,4 --trace burst --requests 200 --new-tokens 2 --policy load
 """
 from __future__ import annotations
 
@@ -46,8 +51,10 @@ def main(argv=None):
                     help="declarative QuantRecipe JSON (per-layer ladders; "
                          "overrides --bits/--n/--h)")
     ap.add_argument("--policy", default="budget",
-                    choices=("budget", "hysteresis", "quality"),
-                    help="rung policy driving the engine (default: budget)")
+                    choices=("budget", "hysteresis", "quality", "load"),
+                    help="rung policy driving the engine (default: budget; "
+                         "'load' = backlog-driven LoadAdaptivePolicy wrapped "
+                         "in hysteresis - the natural pick with --trace)")
     ap.add_argument("--dwell", type=int, default=4,
                     help="hysteresis dwell window (decisions)")
     ap.add_argument("--quality-floor", type=float, default=20.0,
@@ -56,6 +63,19 @@ def main(argv=None):
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--budget-schedule", default="full,part,full",
                     help="comma list of full|part|rungK phases")
+    ap.add_argument("--trace", default=None,
+                    choices=("poisson", "burst", "diurnal"),
+                    help="drive the engine from an open-loop arrival trace "
+                         "through the continuous-batching Scheduler "
+                         "(DESIGN.md Sec. 11) instead of --budget-schedule; "
+                         "--requests becomes the trace length")
+    ap.add_argument("--qps", type=float, default=None,
+                    help="with --trace: steady arrival rate (default: 40%% "
+                         "of the top rung's virtual service capacity)")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="with --trace: admission batch size (default 8)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="with --trace: arrival trace seed")
     ap.add_argument("--save-artifact", default=None, metavar="DIR",
                     help="quantize per --recipe/--bits, write a NestQuant "
                          "artifact (DESIGN.md Sec. 10), and exit")
@@ -66,12 +86,26 @@ def main(argv=None):
                     help="with --artifact: simulate paging over an N Mbit/s "
                          "link (ThrottledPager) and report transfer seconds")
     args = ap.parse_args(argv)
+    if args.policy == "load" and not args.trace:
+        # the budget-schedule path reports the batch size as queue_depth,
+        # which would read as permanent backlog pressure to the load policy
+        ap.error("--policy load needs real traffic signals: use it with "
+                 "--trace poisson|burst|diurnal")
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.reduced()
     pkw = ({"dwell": args.dwell} if args.policy == "hysteresis" else
-           {"floor": args.quality_floor} if args.policy == "quality" else {})
+           {"floor": args.quality_floor} if args.policy == "quality" else
+           {"high_depth": args.max_batch} if args.policy == "load" else {})
+    batch_cap = args.max_batch if args.trace else args.requests
+
+    def build_policy():
+        from ..api import HysteresisPolicy
+        pol = make_policy(args.policy, **pkw)
+        if args.policy == "load":      # damp thrash around capacity edges
+            pol = HysteresisPolicy(pol, dwell=args.dwell)
+        return pol
 
     if args.artifact:
         from ..api import FilePager, ThrottledPager, open_artifact
@@ -81,8 +115,8 @@ def main(argv=None):
             pager = ThrottledPager(pager,
                                    bandwidth_bytes_per_s=args.link_mbps * 125e3)
         engine = ServeEngine.from_artifact(
-            cfg, art, pager=pager, max_batch=args.requests, max_len=64,
-            dtype=jax.numpy.float32, policy=make_policy(args.policy, **pkw))
+            cfg, art, pager=pager, max_batch=batch_cap, max_len=64,
+            dtype=jax.numpy.float32, policy=build_policy())
         store = engine.store
         print(f"[artifact] cold boot read "
               f"{sum(art.bytes_read.values())/1e6:.2f}MB "
@@ -111,8 +145,8 @@ def main(argv=None):
             print(f"[artifact] wrote {args.save_artifact}")
             return
         store = NestQuantStore(nested, mode="part", dtype=jax.numpy.float32)
-        engine = ServeEngine(cfg, store, max_batch=args.requests, max_len=64,
-                             policy=make_policy(args.policy, **pkw))
+        engine = ServeEngine(cfg, store, max_batch=batch_cap, max_len=64,
+                             policy=build_policy())
 
     b = store.bytes()
     need = [store.rung_resident_bytes(r) for r in range(store.num_rungs)]
@@ -120,6 +154,34 @@ def main(argv=None):
           f"scales={b['scales']/1e6:.2f}MB fp={b['fp']/1e6:.2f}MB; "
           f"resident/rung " +
           ",".join(f"{x/1e6:.2f}MB" for x in need))
+
+    if args.trace:
+        # load-adaptive serving (DESIGN.md Sec. 11): schedule an open-loop
+        # arrival trace; the policy sees real backlog, not a hand-written
+        # budget schedule
+        from ..api import LoadGenerator, Scheduler, ServiceModel, calibrate_qps
+        svc = ServiceModel()
+        qps = args.qps or calibrate_qps(store, svc, steps=args.new_tokens,
+                                        max_batch=args.max_batch,
+                                        utilization=0.4)
+        burst = 1.05 * svc.capacity_rps(need[0], args.new_tokens,
+                                        args.max_batch)
+        trace = LoadGenerator(args.trace, qps=qps, n_requests=args.requests,
+                              vocab_size=cfg.vocab_size, seed=args.seed,
+                              new_tokens=args.new_tokens, burst_qps=burst)
+        print(f"[trace {args.trace}] {args.requests} requests at "
+              f"{qps:.0f} req/s steady"
+              + (f", {burst:.0f} req/s burst" if args.trace == "burst"
+                 else ""))
+        report = Scheduler(engine, trace, svc,
+                           max_batch=args.max_batch).run()
+        print("[load] " + report.table())
+        for rec in report.switch_records:
+            print(f"  step {rec['step']}: rung {rec['from_rung']} -> "
+                  f"{rec['to_rung']}: in {rec['page_in']/1e6:.2f}MB "
+                  f"out {rec['page_out']/1e6:.2f}MB "
+                  f"(= computed bytes(delta_k))")
+        return
 
     rng = np.random.default_rng(0)
     uid = 0

@@ -1,4 +1,8 @@
 from .engine import EngineStats, Request, ServeEngine
 from .policies import (POLICIES, BudgetPolicy, HysteresisPolicy,
-                       QualityFloorPolicy, ResourceSignal, RungPolicy,
-                       SignalTracker, make_policy, simulate_policy)
+                       LoadAdaptivePolicy, QualityFloorPolicy, ResourceSignal,
+                       RungPolicy, SignalTracker, StaticRungPolicy,
+                       make_policy, simulate_policy)
+from .scheduler import (TRACES, LoadGenerator, RequestQueue, ScheduledRequest,
+                        Scheduler, SchedulerReport, ServiceModel,
+                        calibrate_qps)

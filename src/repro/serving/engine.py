@@ -49,6 +49,12 @@ class EngineStats:
     mode_history: deque = field(
         default_factory=lambda: deque(maxlen=MODE_HISTORY_CAP))
     mode_counts: Dict[str, int] = field(default_factory=dict)
+    # scheduler counters (DESIGN.md Sec. 11): batches dispatched by a
+    # Scheduler, real requests it admitted, and filler clones it padded
+    # batches with to keep jit shapes stable (not served to any client)
+    sched_steps: int = 0
+    sched_admitted: int = 0
+    sched_filler: int = 0
 
     def record_mode(self, mode: str):
         self.mode_history.append(mode)
@@ -121,7 +127,7 @@ class ServeEngine:
 
     # -- switching ---------------------------------------------------------
     def ensure_mode(self, memory_budget_bytes: Optional[int] = None,
-                    queue_depth: int = 0):
+                    queue_depth: int = 0, backlog_age_s: float = 0.0):
         """Let the policy pick the residency for the current resource
         signal and flip it (the default BudgetPolicy serves the HIGHEST
         ladder rung fitting the HBM budget; rung 0 = the always-resident
@@ -133,9 +139,12 @@ class ServeEngine:
         page-ins (upgrade) / page-outs (downgrade).  ``stats.switches``
         counts only REAL residency changes - first-time parameter pickup
         is not a switch.  The scalar-budget call form is unchanged from
-        the pre-policy API."""
+        the pre-policy API; ``queue_depth``/``backlog_age_s`` are the
+        traffic half of the signal - the Scheduler (DESIGN.md Sec. 11)
+        feeds them from its real request queue."""
         signal = self._tracker.signal(memory_budget_bytes=memory_budget_bytes,
-                                      queue_depth=queue_depth)
+                                      queue_depth=queue_depth,
+                                      backlog_age_s=backlog_age_s)
         report = self.store.apply(self.policy.decide(self.store, signal))
         changed = report["moves"] > 0
         self._tracker.note(changed)
@@ -148,12 +157,23 @@ class ServeEngine:
 
     # -- serving -----------------------------------------------------------
     def generate(self, requests: List[Request],
-                 memory_budget_bytes: Optional[int] = None) -> List[Request]:
-        """Greedy-decode a batch of requests with the current mode."""
+                 memory_budget_bytes: Optional[int] = None, *,
+                 queue_depth: Optional[int] = None,
+                 backlog_age_s: float = 0.0) -> List[Request]:
+        """Greedy-decode a batch of requests with the current mode.
+
+        ``queue_depth``/``backlog_age_s`` let a scheduler report the
+        backlog BEHIND this batch (the admission-step hook, DESIGN.md
+        Sec. 11) so the policy decides once per batch from real traffic
+        pressure; bare calls keep the old behavior of reporting the
+        batch size itself."""
         if len(requests) > self.max_batch:
             raise ValueError(f"batch of {len(requests)} exceeds "
                              f"max_batch={self.max_batch}")
-        self.ensure_mode(memory_budget_bytes, queue_depth=len(requests))
+        self.ensure_mode(
+            memory_budget_bytes,
+            queue_depth=len(requests) if queue_depth is None else queue_depth,
+            backlog_age_s=backlog_age_s)
         params = self._params
         B = len(requests)
         S = max(len(r.prompt) for r in requests)

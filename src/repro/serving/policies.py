@@ -15,6 +15,11 @@ while the MLP stays at INT4.  Shipped policies:
     quality proxy (SQNR dB against the full-bit weight, or a
     core.similarity Pearson correlation) falls below a floor, raising
     those leaves to their lowest acceptable rung.
+  * :class:`LoadAdaptivePolicy` - traffic pressure: one rung down when
+    the request backlog builds, one rung back up when it drains
+    (DESIGN.md Sec. 11); the Scheduler feeds it real queue signals.
+  * :class:`StaticRungPolicy` - pin one rung forever (the fixed
+    operating point the load-adaptive benchmarks compare against).
 
 Policies see the store read-only; the engine (or
 :func:`simulate_policy`) applies the returned assignment and ledgers the
@@ -41,11 +46,16 @@ class ResourceSignal:
 
     ``step`` is a monotone decision counter and ``recent_switches`` the
     steps at which residency last changed (newest last) - enough for a
-    policy to implement dwell windows without private bookkeeping."""
+    policy to implement dwell windows without private bookkeeping.
+    ``queue_depth`` is the request backlog NOT covered by the batch being
+    admitted and ``backlog_age_s`` how long its oldest request has been
+    waiting - the serving Scheduler (DESIGN.md Sec. 11) produces both
+    from real traffic."""
     memory_budget_bytes: Optional[int] = None
     queue_depth: int = 0
     step: int = 0
     recent_switches: Tuple[int, ...] = ()
+    backlog_age_s: float = 0.0
 
 
 @runtime_checkable
@@ -64,6 +74,57 @@ class BudgetPolicy:
                signal: ResourceSignal) -> RungAssignment:
         return RungAssignment.uniform(
             store.best_rung_for(signal.memory_budget_bytes))
+
+
+class StaticRungPolicy:
+    """Pin one uniform rung forever - the fixed-operating-point baseline
+    the load-adaptive benchmarks compare against (a statically deployed
+    INT-b model that never switches)."""
+
+    def __init__(self, rung: object = -1):
+        self.rung = rung
+
+    def decide(self, store: NestQuantStore,
+               signal: ResourceSignal) -> RungAssignment:
+        return RungAssignment.uniform(self.rung)
+
+
+class LoadAdaptivePolicy:
+    """Traffic-pressure policy (DESIGN.md Sec. 11): step DOWN one rung
+    when the backlog builds, step back UP when it drains.
+
+    Pressure is ``queue_depth >= high_depth`` (requests waiting beyond
+    the batch being admitted) or, when ``max_age_s`` is set, a backlog
+    whose oldest request has waited ``backlog_age_s >= max_age_s``.
+    Drained is ``queue_depth <= low_depth``.  In between the policy
+    holds.  Moves are one adjacent rung per decision, so the ledger
+    shows the classic bytes(delta_k) walk, and the target is always
+    capped by ``best_rung_for`` - a memory budget stays a hard
+    constraint on top of the load response.  Wrap in
+    :class:`HysteresisPolicy` to damp thrash when the arrival rate
+    flutters around a capacity boundary."""
+
+    def __init__(self, high_depth: int = 8, low_depth: int = 0,
+                 max_age_s: Optional[float] = None):
+        if low_depth < 0 or high_depth <= low_depth:
+            raise ValueError(f"need high_depth > low_depth >= 0, got "
+                             f"high={high_depth} low={low_depth}")
+        self.high_depth = high_depth
+        self.low_depth = low_depth
+        self.max_age_s = max_age_s
+
+    def decide(self, store: NestQuantStore,
+               signal: ResourceSignal) -> RungAssignment:
+        cap = store.best_rung_for(signal.memory_budget_bytes)
+        cur = min(store.rung, cap)      # store.rung = floor when mixed
+        pressured = (signal.queue_depth >= self.high_depth
+                     or (self.max_age_s is not None
+                         and signal.backlog_age_s >= self.max_age_s))
+        if pressured:
+            return RungAssignment.uniform(max(cur - 1, 0))
+        if signal.queue_depth <= self.low_depth:
+            return RungAssignment.uniform(min(cur + 1, cap))
+        return RungAssignment.uniform(cur)
 
 
 class HysteresisPolicy:
@@ -180,11 +241,13 @@ class QualityFloorPolicy:
 
 
 POLICIES = {"budget": BudgetPolicy, "hysteresis": HysteresisPolicy,
-            "quality": QualityFloorPolicy}
+            "quality": QualityFloorPolicy, "load": LoadAdaptivePolicy,
+            "static": StaticRungPolicy}
 
 
 def make_policy(name: str, **kwargs) -> RungPolicy:
-    """CLI-facing factory: 'budget' | 'hysteresis' | 'quality'."""
+    """CLI-facing factory:
+    'budget' | 'hysteresis' | 'quality' | 'load' | 'static'."""
     if name not in POLICIES:
         raise ValueError(f"unknown policy {name!r}; pick from "
                          f"{sorted(POLICIES)}")
@@ -201,10 +264,12 @@ class SignalTracker:
         self.switch_steps: deque = deque(maxlen=history)
 
     def signal(self, memory_budget_bytes: Optional[int] = None,
-               queue_depth: int = 0) -> ResourceSignal:
+               queue_depth: int = 0,
+               backlog_age_s: float = 0.0) -> ResourceSignal:
         return ResourceSignal(memory_budget_bytes=memory_budget_bytes,
                               queue_depth=queue_depth, step=self.step,
-                              recent_switches=tuple(self.switch_steps))
+                              recent_switches=tuple(self.switch_steps),
+                              backlog_age_s=backlog_age_s)
 
     def note(self, moved: bool):
         """Advance one decision, remembering whether residency changed."""
@@ -217,6 +282,14 @@ def simulate_policy(policy: RungPolicy, store: NestQuantStore,
                     budgets: Sequence[Optional[int]]) -> Dict[str, object]:
     """Drive ``policy`` over a budget trace WITHOUT decoding - the
     switching cost model on its own (benchmarks, examples, tests).
+
+    .. deprecated::
+        Every signal here is hand-synthesized (only the budget field is
+        ever populated).  For anything traffic-shaped - queue depth,
+        backlog age, latency under load - use the continuous-batching
+        :class:`~repro.serving.scheduler.Scheduler` (DESIGN.md Sec. 11),
+        which produces real ``ResourceSignal``s from arrival traces.
+        This helper stays for pure budget-trace cost modeling.
 
     Returns {'switches', 'page_in', 'page_out', 'modes'} where 'switches'
     counts decisions that actually moved residency."""

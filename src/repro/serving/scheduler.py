@@ -1,0 +1,472 @@
+"""Load-adaptive serving: an admission-controlled continuous-batching
+scheduler that drives rung switching from real traffic (DESIGN.md
+Sec. 11).
+
+This closes the loop the policy stack left open: every
+:class:`~repro.serving.policies.ResourceSignal` used to be hand-built
+(``simulate_policy`` only ever set the budget field).  Here a seeded
+:class:`LoadGenerator` produces an open-loop arrival trace on a VIRTUAL
+clock, a :class:`RequestQueue` holds the backlog, and each scheduler
+step runs the state machine
+
+    admit -> signal -> decide -> page -> generate
+
+admitting up to ``max_batch`` requests, reporting the leftover backlog
+(depth + oldest-wait age) to the engine's :class:`RungPolicy`, letting
+the store page exactly the delta streams the decision moves, then
+decoding the batch for real through ``engine.generate``.  Time is
+virtual: a deterministic :class:`ServiceModel` charges each batch for
+streaming the resident rung's weights (decode is weight-bandwidth
+bound) and each switch for its ledgered page traffic, so a lower rung
+really does serve faster, backlog really does drain, and p50/p95
+latency, throughput, and rung occupancy are reproducible on any
+machine - while token generation itself stays end-to-end real.
+
+The paper's resource-adaptation pitch becomes executable behavior: a
+burst downshifts the model to the part-bit rung for throughput, the
+drained queue climbs it back, and the :class:`SwitchLedger` shows every
+move paging exactly ``bytes(delta_k)`` (``benchmarks/bench_serving.py``
+asserts all of it).
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .engine import Request, ServeEngine
+
+TRACES = ("poisson", "burst", "diurnal")
+
+
+# ---------------------------------------------------------------------------
+# open-loop arrival traces
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Arrival:
+    """One request due to arrive at virtual time ``t``."""
+    uid: int
+    t: float
+    prompt: np.ndarray
+    max_new_tokens: int
+
+
+class LoadGenerator:
+    """Seeded open-loop arrival traces on the virtual clock.
+
+    Arrivals are a Poisson process whose rate follows the trace shape
+    (DESIGN.md Sec. 11): ``poisson`` holds ``qps`` steady, ``burst``
+    jumps to ``burst_qps`` for the middle ``burst_window`` fraction of
+    the requests, ``diurnal`` ramps ``qps`` through one low-high-low
+    day cycle.  Open-loop means arrivals never wait for the server -
+    exactly the regime where an overloaded rung builds real backlog.
+    Same seed, same trace: everything downstream is deterministic."""
+
+    def __init__(self, kind: str = "poisson", *, qps: float, n_requests: int,
+                 vocab_size: int, seed: int = 0, prompt_len: int = 6,
+                 new_tokens: int = 2, burst_qps: Optional[float] = None,
+                 burst_window: Tuple[float, float] = (1 / 3, 2 / 3),
+                 diurnal_floor: float = 0.2):
+        if kind not in TRACES:
+            raise ValueError(f"unknown trace {kind!r}; pick from {TRACES}")
+        if qps <= 0 or n_requests <= 0:
+            raise ValueError(f"need qps > 0 and n_requests > 0, got "
+                             f"qps={qps} n_requests={n_requests}")
+        if not 0 <= burst_window[0] < burst_window[1] <= 1:
+            raise ValueError(f"burst_window must be an ascending fraction "
+                             f"pair in [0, 1], got {burst_window}")
+        self.kind = kind
+        self.qps = qps
+        self.n_requests = n_requests
+        self.vocab_size = vocab_size
+        self.seed = seed
+        self.prompt_len = prompt_len
+        self.new_tokens = new_tokens
+        self.burst_qps = burst_qps if burst_qps is not None else 4.0 * qps
+        self.burst_window = burst_window
+        self.diurnal_floor = diurnal_floor
+
+    def rate_at(self, frac: float) -> float:
+        """Arrival rate (requests/s of virtual time) at trace fraction
+        ``frac`` in [0, 1]."""
+        if self.kind == "burst":
+            lo, hi = self.burst_window
+            return self.burst_qps if lo <= frac < hi else self.qps
+        if self.kind == "diurnal":
+            f = self.diurnal_floor
+            return self.qps * (f + (1 - f) * 0.5 *
+                               (1 - math.cos(2 * math.pi * frac)))
+        return self.qps
+
+    def arrivals(self) -> List[Arrival]:
+        rng = np.random.default_rng(self.seed)
+        t = 0.0
+        out: List[Arrival] = []
+        for i in range(self.n_requests):
+            t += float(rng.exponential(1.0 / self.rate_at(i / self.n_requests)))
+            prompt = rng.integers(0, self.vocab_size,
+                                  size=self.prompt_len).astype(np.int32)
+            out.append(Arrival(uid=i, t=t, prompt=prompt,
+                               max_new_tokens=self.new_tokens))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# request queue
+# ---------------------------------------------------------------------------
+@dataclass
+class ScheduledRequest:
+    """A request's life on the virtual clock: arrive -> admit -> done.
+
+    ``queue_s + service_s == done_s - arrival_s`` exactly - the latency
+    accounting the scheduler tests pin down."""
+    request: Request
+    arrival_s: float
+    admit_s: float = -1.0
+    done_s: float = -1.0
+    rung: int = -1                # rung it was served at
+    mode: str = ""
+
+    @property
+    def queue_s(self) -> float:
+        return self.admit_s - self.arrival_s
+
+    @property
+    def service_s(self) -> float:
+        return self.done_s - self.admit_s
+
+    @property
+    def total_s(self) -> float:
+        return self.done_s - self.arrival_s
+
+
+class RequestQueue:
+    """FIFO backlog of arrived-but-unserved requests."""
+
+    def __init__(self):
+        self._pending: deque = deque()
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def push(self, sreq: ScheduledRequest):
+        self._pending.append(sreq)
+
+    def oldest_arrival_s(self) -> float:
+        if not self._pending:
+            raise IndexError("queue is empty")
+        return self._pending[0].arrival_s
+
+    def oldest_age_s(self, now: float) -> float:
+        """How long the head of the queue has been waiting (0 if empty)."""
+        return now - self._pending[0].arrival_s if self._pending else 0.0
+
+    def admit(self, now: float, max_batch: int) -> List[ScheduledRequest]:
+        """Pop up to ``max_batch`` requests FIFO, stamping admit time."""
+        if max_batch <= 0:
+            raise ValueError(f"max_batch must be positive, got {max_batch}")
+        batch = []
+        while self._pending and len(batch) < max_batch:
+            sreq = self._pending.popleft()
+            sreq.admit_s = now
+            batch.append(sreq)
+        return batch
+
+
+# ---------------------------------------------------------------------------
+# virtual service-time model
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ServiceModel:
+    """Deterministic virtual-clock costs (DESIGN.md Sec. 11).
+
+    Decode is memory-bandwidth bound: one decode step streams the
+    resident rung's weight bytes once, whatever the batch size - which
+    is exactly why batching raises throughput and why a lower rung
+    (fewer resident bytes) serves measurably faster.  A switch charges
+    per-move latency plus its ledgered page traffic over the (slower)
+    host->HBM paging link, so rung thrash has a real price and
+    hysteresis has something to save."""
+    weight_gbps: float = 1.0          # HBM weight-streaming bandwidth
+    page_gbps: float = 0.5            # delta page-in/out link
+    batch_overhead_s: float = 5e-5    # per-batch fixed cost (launch etc.)
+    switch_latency_s: float = 1e-4    # per ledger move fixed cost
+
+    def batch_seconds(self, resident_bytes: int, steps: int) -> float:
+        """Virtual seconds to serve one batch of ``steps`` decode steps
+        with ``resident_bytes`` of weights resident."""
+        return (self.batch_overhead_s
+                + steps * resident_bytes / (self.weight_gbps * 1e9))
+
+    def switch_seconds(self, page_bytes: int, moves: int) -> float:
+        """Virtual seconds a residency change stalls the engine for."""
+        if moves == 0:
+            return 0.0
+        return (moves * self.switch_latency_s
+                + page_bytes / (self.page_gbps * 1e9))
+
+    def capacity_rps(self, resident_bytes: int, steps: int,
+                     max_batch: int) -> float:
+        """Saturation throughput (requests/s) at full batches."""
+        return max_batch / self.batch_seconds(resident_bytes, steps)
+
+
+def calibrate_qps(store, service: ServiceModel, *, steps: int,
+                  max_batch: int, rung: Optional[int] = None,
+                  utilization: float = 0.6) -> float:
+    """Arrival rate that loads rung ``rung`` (default: top) to
+    ``utilization`` of its saturation throughput - how the CLI and
+    benchmarks pick trace rates that mean the same thing for any model
+    size."""
+    r = store.num_rungs - 1 if rung is None else rung
+    return utilization * service.capacity_rps(
+        store.rung_resident_bytes(r), steps, max_batch)
+
+
+# ---------------------------------------------------------------------------
+# the scheduler
+# ---------------------------------------------------------------------------
+@dataclass
+class SchedulerReport:
+    """Everything one scheduler run observed (all times virtual seconds).
+
+    ``switch_records`` holds one entry per DECISION that moved residency:
+    the store-level from/to rung, the number of ledger moves, the
+    observed page bytes, and the expected bytes recomputed from the
+    per-leaf delta stream metadata - observed must equal expected, the
+    Table-11 exactness claim under live traffic."""
+    requests: List[ScheduledRequest]
+    steps: List[Dict[str, object]]
+    switch_records: List[Dict[str, int]]
+    elapsed_s: float
+    trace_kind: str
+
+    def latency(self, kind: str = "total") -> Dict[str, float]:
+        """p50/p95/mean/max of 'queue' | 'service' | 'total' latency."""
+        vals = np.array([getattr(r, f"{kind}_s") for r in self.requests])
+        if vals.size == 0:
+            return {"p50": 0.0, "p95": 0.0, "mean": 0.0, "max": 0.0}
+        return {"p50": float(np.percentile(vals, 50)),
+                "p95": float(np.percentile(vals, 95)),
+                "mean": float(vals.mean()), "max": float(vals.max())}
+
+    def rung_occupancy(self, weight: str = "requests") -> Dict[str, float]:
+        """Fraction of serving at each mode.
+
+        ``weight='requests'`` counts requests served per mode (quality
+        delivered per request); ``weight='time'`` weighs each batch by
+        its virtual service time (fraction of busy time spent at each
+        operating point - the deployment-facing occupancy)."""
+        if weight == "requests":
+            counts: Dict[str, float] = {}
+            for r in self.requests:
+                counts[r.mode] = counts.get(r.mode, 0) + 1
+            total = float(len(self.requests))
+        elif weight == "time":
+            counts = {}
+            for s in self.steps:
+                dt = s["switch_s"] + s["batch_s"]
+                counts[s["mode"]] = counts.get(s["mode"], 0.0) + dt
+            total = sum(counts.values())
+        else:
+            raise ValueError(f"weight must be 'requests' or 'time', "
+                             f"got {weight!r}")
+        return {m: c / max(total, 1e-12) for m, c in sorted(counts.items())}
+
+    def mean_rung(self, weight: str = "requests") -> float:
+        """Average rung served (same ``weight`` semantics as
+        :meth:`rung_occupancy`) - the scalar occupancy the
+        static-vs-adaptive comparison is judged on."""
+        if not self.requests:
+            return 0.0
+        if weight == "requests":
+            return sum(r.rung for r in self.requests) / len(self.requests)
+        if weight != "time":
+            raise ValueError(f"weight must be 'requests' or 'time', "
+                             f"got {weight!r}")
+        num = sum(s["rung"] * (s["switch_s"] + s["batch_s"])
+                  for s in self.steps)
+        den = sum(s["switch_s"] + s["batch_s"] for s in self.steps)
+        return num / max(den, 1e-12)
+
+    @property
+    def throughput_rps(self) -> float:
+        return len(self.requests) / self.elapsed_s if self.elapsed_s else 0.0
+
+    @property
+    def page_in_bytes(self) -> int:
+        return sum(rec["page_in"] for rec in self.switch_records)
+
+    @property
+    def page_out_bytes(self) -> int:
+        return sum(rec["page_out"] for rec in self.switch_records)
+
+    def summary(self) -> Dict[str, object]:
+        lat = self.latency("total")
+        return {"trace": self.trace_kind, "requests": len(self.requests),
+                "elapsed_s": self.elapsed_s,
+                "throughput_rps": self.throughput_rps,
+                "p50_ms": lat["p50"] * 1e3, "p95_ms": lat["p95"] * 1e3,
+                "queue_p95_ms": self.latency("queue")["p95"] * 1e3,
+                "mean_rung": self.mean_rung(),
+                "mean_rung_time": self.mean_rung("time"),
+                "rung_occupancy": self.rung_occupancy(),
+                "switches": len(self.switch_records),
+                "switch_moves": sum(int(r["moves"])
+                                    for r in self.switch_records),
+                "page_in_mb": self.page_in_bytes / 1e6,
+                "page_out_mb": self.page_out_bytes / 1e6}
+
+    def table(self) -> str:
+        """The p95 / rung-occupancy table, print-ready."""
+        s = self.summary()
+        occ = " ".join(f"{m}={f:.0%}" for m, f in s["rung_occupancy"].items())
+        return (f"{s['requests']} reqs in {s['elapsed_s']:.2f}s virtual "
+                f"({s['throughput_rps']:.0f} req/s) | "
+                f"p50={s['p50_ms']:.1f}ms p95={s['p95_ms']:.1f}ms | "
+                f"mean rung={s['mean_rung']:.2f} [{occ}] | "
+                f"{s['switches']} switch decisions, "
+                f"in={s['page_in_mb']:.2f}MB out={s['page_out_mb']:.2f}MB")
+
+
+class Scheduler:
+    """Admission-controlled continuous batching over a
+    :class:`~repro.serving.engine.ServeEngine` (DESIGN.md Sec. 11).
+
+    Each step: ingest every arrival up to ``now`` (plus a bounded
+    ``admit_wait_s`` coalescing window so light traffic still forms
+    batches), admit up to ``max_batch`` requests, report the LEFTOVER
+    backlog (depth, oldest age) and the optional memory budget to the
+    engine - whose policy then decides the rung once for the batch and
+    pages exactly the delta streams it moves - and decode for real.
+    The virtual clock advances by the modeled switch + service time;
+    requests arriving meanwhile join the next batch, which is what
+    makes the batching continuous.
+
+    ``bucket_batches`` pads partial batches to ``max_batch`` with
+    throwaway clones of the last admitted request so jax sees one batch
+    shape per mode (fillers are flagged in ``stats.sched_filler``,
+    never returned, and cost nothing on the virtual clock - one decode
+    step streams the weights once regardless of batch rows)."""
+
+    def __init__(self, engine: ServeEngine, trace: LoadGenerator,
+                 service: Optional[ServiceModel] = None,
+                 max_batch: Optional[int] = None,
+                 admit_wait_s: float = 0.01,
+                 memory_budget_bytes: Optional[int] = None,
+                 bucket_batches: bool = True):
+        if max_batch is None:
+            max_batch = engine.max_batch
+        if max_batch > engine.max_batch:
+            raise ValueError(
+                f"scheduler max_batch={max_batch} over-admits: the engine "
+                f"only serves batches of {engine.max_batch}")
+        if max_batch <= 0:
+            raise ValueError(f"max_batch must be positive, got {max_batch}")
+        if admit_wait_s < 0:
+            raise ValueError(f"admit_wait_s must be >= 0, got {admit_wait_s}")
+        self.engine = engine
+        self.trace = trace
+        self.service = service if service is not None else ServiceModel()
+        self.max_batch = max_batch
+        self.admit_wait_s = admit_wait_s
+        self.memory_budget_bytes = memory_budget_bytes
+        self.bucket_batches = bucket_batches
+
+    def run(self) -> SchedulerReport:
+        eng, store = self.engine, self.engine.store
+        arrivals = self.trace.arrivals()
+        # per-leaf delta stream sizes: lets every scheduled switch be
+        # checked against the metadata-computed bytes(delta_k), whatever
+        # mix of leaves the policy moved
+        streams = store.leaf_streams()
+        queue = RequestQueue()
+        done: List[ScheduledRequest] = []
+        steps: List[Dict[str, object]] = []
+        switch_records: List[Dict[str, int]] = []
+        i = 0
+        now = 0.0
+        while i < len(arrivals) or len(queue):
+            # -- admit ------------------------------------------------------
+            if not len(queue):
+                now = max(now, arrivals[i].t)   # idle: jump to next arrival
+            while i < len(arrivals) and arrivals[i].t <= now:
+                a = arrivals[i]
+                queue.push(ScheduledRequest(
+                    Request(a.uid, a.prompt, a.max_new_tokens), a.t))
+                i += 1
+            # coalesce: wait (bounded by the oldest waiter's patience) for
+            # arrivals that would fill this batch
+            while (len(queue) < self.max_batch and i < len(arrivals)
+                   and arrivals[i].t
+                   <= queue.oldest_arrival_s() + self.admit_wait_s):
+                a = arrivals[i]
+                now = a.t
+                queue.push(ScheduledRequest(
+                    Request(a.uid, a.prompt, a.max_new_tokens), a.t))
+                i += 1
+            batch = queue.admit(now, self.max_batch)
+            # -- signal -----------------------------------------------------
+            depth = len(queue)                   # backlog BEHIND this batch
+            age = queue.oldest_age_s(now)
+            reqs = [s.request for s in batch]
+            n_filler = 0
+            if self.bucket_batches and len(reqs) < self.max_batch:
+                n_filler = self.max_batch - len(reqs)
+                tpl = batch[-1]
+                reqs = reqs + [Request(-1, tpl.request.prompt,
+                                       tpl.request.max_new_tokens)
+                               for _ in range(n_filler)]
+            # -- decide + page + generate ----------------------------------
+            ev0 = len(store.ledger.events)
+            rungs_before = store.leaf_rungs()
+            rung_before = store.rung
+            eng.generate(reqs, self.memory_budget_bytes,
+                         queue_depth=depth, backlog_age_s=age)
+            moved = store.ledger.events[ev0:]
+            page_in = sum(e[2] for e in moved)
+            page_out = sum(e[3] for e in moved)
+            if moved:
+                # expected traffic for THIS decision from the per-leaf
+                # rung walk: every page-in/out is a contiguous run of
+                # delta streams, so the sums are exact by construction
+                expect_in = expect_out = 0
+                for path, r1 in store.leaf_rungs().items():
+                    r0 = rungs_before[path]
+                    if r1 > r0:
+                        expect_in += sum(streams[path][1 + r0:1 + r1])
+                    elif r0 > r1:
+                        expect_out += sum(streams[path][1 + r1:1 + r0])
+                switch_records.append(
+                    {"step": len(steps), "from_rung": rung_before,
+                     "to_rung": store.rung, "moves": len(moved),
+                     "page_in": page_in, "page_out": page_out,
+                     "expected_in": expect_in, "expected_out": expect_out})
+            # -- advance the virtual clock ---------------------------------
+            switch_s = self.service.switch_seconds(page_in + page_out,
+                                                   len(moved))
+            batch_s = self.service.batch_seconds(
+                store.resident_bytes(),
+                max(s.request.max_new_tokens for s in batch))
+            now += switch_s + batch_s
+            for s in batch:
+                s.done_s = now
+                s.rung = store.rung
+                s.mode = store.mode
+            done.extend(batch)
+            eng.stats.sched_steps += 1
+            eng.stats.sched_admitted += len(batch)
+            eng.stats.sched_filler += n_filler
+            steps.append({"step": len(steps), "admit_s": batch[0].admit_s,
+                          "done_s": now, "batch": len(batch),
+                          "filler": n_filler, "queue_depth": depth,
+                          "backlog_age_s": age, "mode": store.mode,
+                          "rung": store.rung, "page_in": page_in,
+                          "page_out": page_out, "switch_s": switch_s,
+                          "batch_s": batch_s})
+        return SchedulerReport(requests=done, steps=steps,
+                               switch_records=switch_records, elapsed_s=now,
+                               trace_kind=self.trace.kind)

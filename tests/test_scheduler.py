@@ -1,0 +1,218 @@
+"""Load-adaptive scheduler tests (DESIGN.md Sec. 11): seeded traces,
+burst downshift + recovery, byte-exact scheduled switching, virtual-clock
+latency accounting, admission control."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import NestQuantStore, QuantRecipe, quantize
+from repro.models import make_model
+from repro.serving import (HysteresisPolicy, LoadAdaptivePolicy,
+                           LoadGenerator, Request, RequestQueue,
+                           ResourceSignal, Scheduler, ServeEngine,
+                           ServiceModel)
+
+N_REQUESTS = 64
+MAX_BATCH = 4
+NEW_TOKENS = 2
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen2-1.5b").reduced()
+    params = make_model(cfg).init(jax.random.PRNGKey(0))
+    nested = quantize(params, QuantRecipe(bits=(8, 4)))
+    return cfg, nested
+
+
+def _make_trace(store, svc, kind="burst", n=N_REQUESTS, seed=0,
+                vocab_size=128):
+    qps = 0.4 * svc.capacity_rps(
+        store.rung_resident_bytes(store.num_rungs - 1), NEW_TOKENS, MAX_BATCH)
+    burst = 1.05 * svc.capacity_rps(
+        store.rung_resident_bytes(0), NEW_TOKENS, MAX_BATCH)
+    return LoadGenerator(kind, qps=qps, n_requests=n, vocab_size=vocab_size,
+                         seed=seed, new_tokens=NEW_TOKENS, burst_qps=burst,
+                         burst_window=(0.3, 0.6))
+
+
+@pytest.fixture(scope="module")
+def burst_run(setup):
+    """ONE real scheduled run shared by the behavioral assertions below."""
+    cfg, nested = setup
+    svc = ServiceModel()
+    store = NestQuantStore(nested, mode="full", dtype=jnp.float32)
+    engine = ServeEngine(
+        cfg, store, max_batch=MAX_BATCH, max_len=32,
+        policy=HysteresisPolicy(LoadAdaptivePolicy(high_depth=MAX_BATCH),
+                                dwell=2))
+    trace = _make_trace(store, svc, vocab_size=cfg.vocab_size)
+    report = Scheduler(engine, trace, svc).run()
+    return store, engine, trace, report
+
+
+# ---------------------------------------------------------------------------
+# traces
+# ---------------------------------------------------------------------------
+def test_traces_are_seeded_and_shaped():
+    kw = dict(qps=100.0, n_requests=50, vocab_size=64, seed=3)
+    a = LoadGenerator("poisson", **kw).arrivals()
+    b = LoadGenerator("poisson", **kw).arrivals()
+    assert [x.t for x in a] == [x.t for x in b]
+    assert all((x.prompt == y.prompt).all() for x, y in zip(a, b))
+    c = LoadGenerator("poisson", **{**kw, "seed": 4}).arrivals()
+    assert [x.t for x in a] != [x.t for x in c]
+    assert [x.uid for x in a] == list(range(50))
+    assert all(x.t < y.t for x, y in zip(a, a[1:]))
+
+    gen = LoadGenerator("burst", qps=100.0, burst_qps=1000.0,
+                        n_requests=300, vocab_size=64,
+                        burst_window=(1 / 3, 2 / 3))
+    arr = gen.arrivals()
+    gaps = np.diff([x.t for x in arr])
+    inside = gaps[100:199].mean()          # arrivals 101..200 are in-window
+    outside = np.concatenate([gaps[:99], gaps[200:]]).mean()
+    assert inside < outside / 3            # ~10x rate, loose factor
+    assert gen.rate_at(0.5) == 1000.0 and gen.rate_at(0.1) == 100.0
+
+    diurnal = LoadGenerator("diurnal", qps=100.0, n_requests=10,
+                            vocab_size=64)
+    assert diurnal.rate_at(0.5) == pytest.approx(100.0)
+    assert diurnal.rate_at(0.0) == pytest.approx(20.0)   # floor of the day
+    assert diurnal.rate_at(0.25) < diurnal.rate_at(0.5)
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError, match="unknown trace"):
+        LoadGenerator("sawtooth", qps=1.0, n_requests=1, vocab_size=4)
+    with pytest.raises(ValueError, match="qps"):
+        LoadGenerator("poisson", qps=0.0, n_requests=1, vocab_size=4)
+    with pytest.raises(ValueError, match="burst_window"):
+        LoadGenerator("burst", qps=1.0, n_requests=1, vocab_size=4,
+                      burst_window=(0.8, 0.2))
+
+
+# ---------------------------------------------------------------------------
+# behavior under burst: downshift for throughput, recover when drained
+# ---------------------------------------------------------------------------
+def test_burst_triggers_downshift_then_recovery(burst_run):
+    store, engine, trace, report = burst_run
+    modes = [s["mode"] for s in report.steps]
+    assert modes[0] == "full"              # steady start serves the top rung
+    assert "part" in modes                 # the burst forced a downshift
+    assert modes[-1] == "full"             # drained queue climbed back
+    first_part = modes.index("part")
+    assert "full" in modes[first_part:]    # recovery AFTER the downshift
+    # the downshift happened under real pressure: the decision that moved
+    # residency down saw a backlog at or past the high watermark
+    down_steps = [r["step"] for r in report.switch_records
+                  if r["to_rung"] < r["from_rung"]]
+    assert down_steps
+    assert report.steps[down_steps[0]]["queue_depth"] >= MAX_BATCH
+
+
+def test_scheduled_switches_page_exact_delta_bytes(burst_run):
+    store, engine, trace, report = burst_run
+    assert len(report.switch_records) >= 2       # at least down + up
+    for rec in report.switch_records:
+        assert rec["page_in"] == rec["expected_in"], rec
+        assert rec["page_out"] == rec["expected_out"], rec
+        # uniform adjacent moves: the tree-wide Table-11 quantum exactly
+        assert abs(rec["from_rung"] - rec["to_rung"]) == 1, rec
+        k = min(rec["from_rung"], rec["to_rung"])
+        assert rec["page_in"] + rec["page_out"] == store.delta_bytes(k), rec
+    # and nothing moved outside scheduled decisions
+    assert store.ledger.page_in_bytes == report.page_in_bytes
+    assert store.ledger.page_out_bytes == report.page_out_bytes
+
+
+def test_latency_accounting_sums_to_virtual_clock(burst_run):
+    store, engine, trace, report = burst_run
+    assert len(report.requests) == N_REQUESTS
+    arrivals = {a.uid: a.t for a in trace.arrivals()}
+    for r in report.requests:
+        assert r.request.uid >= 0              # no filler clone leaked out
+        assert r.arrival_s == arrivals[r.request.uid]
+        assert r.arrival_s <= r.admit_s < r.done_s
+        assert r.queue_s + r.service_s == pytest.approx(r.total_s, abs=1e-12)
+        assert len(r.request.out_tokens) == NEW_TOKENS
+    assert report.elapsed_s == max(r.done_s for r in report.requests)
+    assert sorted(r.request.uid for r in report.requests) == \
+        list(range(N_REQUESTS))
+    # occupancy fractions are fractions
+    for weight in ("requests", "time"):
+        occ = report.rung_occupancy(weight)
+        assert sum(occ.values()) == pytest.approx(1.0)
+        assert 0.0 <= report.mean_rung(weight) <= store.num_rungs - 1
+
+
+def test_engine_scheduler_counters(burst_run):
+    store, engine, trace, report = burst_run
+    assert engine.stats.sched_steps == len(report.steps)
+    assert engine.stats.sched_admitted == N_REQUESTS
+    # partial batches were padded, never surfaced
+    assert engine.stats.sched_filler == \
+        sum(s["filler"] for s in report.steps)
+    assert engine.stats.prefills == len(report.steps)
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+def test_over_admission_raises(setup, burst_run):
+    cfg, nested = setup
+    store, engine, trace, report = burst_run
+    with pytest.raises(ValueError, match="over-admits"):
+        Scheduler(engine, trace, max_batch=engine.max_batch + 1)
+    with pytest.raises(ValueError, match="max_batch"):
+        Scheduler(engine, trace, max_batch=0)
+    with pytest.raises(ValueError, match="max_batch"):
+        engine.generate([Request(i, np.array([1, 2], np.int32), 1)
+                         for i in range(engine.max_batch + 1)])
+    with pytest.raises(ValueError, match="max_batch"):
+        RequestQueue().admit(0.0, 0)
+    with pytest.raises(ValueError, match="admit_wait_s"):
+        Scheduler(engine, trace, admit_wait_s=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# LoadAdaptivePolicy decisions (no engine needed)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def small_store():
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 64))
+    nested = quantize({"w": w}, QuantRecipe(bits=(8, 6, 4), rounding="rtn"))
+    return NestQuantStore(nested, mode="rung1")
+
+
+def _rung(store, assignment):
+    return set(store.resolve_assignment(assignment).values())
+
+
+def test_load_adaptive_steps_one_rung(small_store):
+    pol = LoadAdaptivePolicy(high_depth=8, low_depth=0)
+    st = small_store
+    assert _rung(st, pol.decide(st, ResourceSignal(queue_depth=8))) == {0}
+    assert _rung(st, pol.decide(st, ResourceSignal(queue_depth=0))) == {2}
+    assert _rung(st, pol.decide(st, ResourceSignal(queue_depth=3))) == {1}
+    # backlog age is an alternative pressure trigger
+    aged = LoadAdaptivePolicy(high_depth=8, max_age_s=0.5)
+    assert _rung(st, aged.decide(
+        st, ResourceSignal(queue_depth=1, backlog_age_s=0.6))) == {0}
+    # a hard memory budget caps the climb whatever the queue says
+    budget = st.rung_resident_bytes(1)
+    assert _rung(st, pol.decide(st, ResourceSignal(
+        memory_budget_bytes=budget, queue_depth=0))) == {1}
+
+
+def test_load_adaptive_validation_and_service_model(small_store):
+    with pytest.raises(ValueError, match="high_depth"):
+        LoadAdaptivePolicy(high_depth=2, low_depth=2)
+    svc = ServiceModel()
+    assert svc.switch_seconds(10 ** 9, 0) == 0.0
+    assert svc.switch_seconds(0, 1) == svc.switch_latency_s
+    slow = svc.batch_seconds(10 ** 6, 4)
+    assert slow > svc.batch_seconds(10 ** 5, 4)   # fewer bytes serve faster
+    assert svc.capacity_rps(10 ** 6, 4, 8) == pytest.approx(8 / slow)
