@@ -22,9 +22,10 @@ def main() -> None:
                     help="also write the emitted rows as JSON")
     args = ap.parse_args()
 
-    from . import (bench_cliff, bench_kernels, bench_nesting_quality,
-                   bench_numerical_errors, bench_serving, bench_similarity,
-                   bench_storage, bench_switching, bench_transport, roofline)
+    from . import (bench_chaos, bench_cliff, bench_kernels,
+                   bench_nesting_quality, bench_numerical_errors,
+                   bench_serving, bench_similarity, bench_storage,
+                   bench_switching, bench_transport, roofline)
     suites = [
         ("table7_numerical_errors", bench_numerical_errors.run),
         ("table4_5_similarity", bench_similarity.run),
@@ -34,6 +35,7 @@ def main() -> None:
         ("table11_switching", bench_switching.run),
         ("transport", bench_transport.run),
         ("serving", bench_serving.run),
+        ("chaos", bench_chaos.run),
         ("kernels", bench_kernels.run),
         ("roofline", roofline.run),
     ]

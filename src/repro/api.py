@@ -29,15 +29,18 @@ from .core.switching import (NestQuantStore, RungAssignment, SwitchLedger,
                              diverse_ladder_bytes)
 from .models import make_model
 from .serving.engine import EngineStats, Request, ServeEngine
-from .serving.policies import (POLICIES, BudgetPolicy, HysteresisPolicy,
+from .serving.policies import (POLICIES, BudgetPolicy, DeliveryHealth,
+                               FailureAwarePolicy, HysteresisPolicy,
                                LoadAdaptivePolicy, QualityFloorPolicy,
                                ResourceSignal, RungPolicy, SignalTracker,
                                StaticRungPolicy, make_policy, simulate_policy)
 from .serving.scheduler import (LoadGenerator, ScheduledRequest, Scheduler,
                                 SchedulerReport, ServiceModel, calibrate_qps)
-from .storage import (Artifact, ArtifactError, DeltaPager, FilePager,
-                      InMemoryPager, ThrottledPager, load_store,
-                      open_artifact, save_artifact)
+from .storage import (Artifact, ArtifactError, ChaosPager, CorruptStreamError,
+                      DeltaPager, FilePager, InMemoryPager, Outage,
+                      PagerError, ResilientPager, RetryPolicy, StreamHealth,
+                      ThrottledPager, TransientPagerError, VirtualClock,
+                      WallClock, load_store, open_artifact, save_artifact)
 
 __all__ = [
     # recipes
@@ -50,9 +53,9 @@ __all__ = [
     "diverse_ladder_bytes",
     # policies
     "RungPolicy", "BudgetPolicy", "HysteresisPolicy", "QualityFloorPolicy",
-    "LoadAdaptivePolicy", "StaticRungPolicy",
-    "ResourceSignal", "SignalTracker", "POLICIES", "make_policy",
-    "simulate_policy",
+    "LoadAdaptivePolicy", "StaticRungPolicy", "FailureAwarePolicy",
+    "ResourceSignal", "DeliveryHealth", "SignalTracker", "POLICIES",
+    "make_policy", "simulate_policy",
     # serving
     "ServeEngine", "Request", "EngineStats",
     # load-adaptive scheduling (DESIGN.md Sec. 11)
@@ -62,6 +65,10 @@ __all__ = [
     "save_artifact", "open_artifact", "load_store", "Artifact",
     "ArtifactError", "DeltaPager", "InMemoryPager", "FilePager",
     "ThrottledPager",
+    # fault tolerance (DESIGN.md Sec. 12)
+    "PagerError", "TransientPagerError", "CorruptStreamError",
+    "ChaosPager", "Outage", "ResilientPager", "RetryPolicy", "StreamHealth",
+    "VirtualClock", "WallClock",
     # models/configs
     "ARCHS", "get_config", "make_model",
 ]

@@ -259,6 +259,85 @@ class NestQuantStore:
         self._leaf_rungs[path] = target
         return (obs_in, obs_out)
 
+    # -- two-phase switching plumbing (DESIGN.md Sec. 12) -----------------
+    def _stage_leaf(self, path: str, target: int) -> Dict[str, object]:
+        """STAGE one leaf's move to ``target`` levels: fetch every upgrade
+        stream (size-validated against metadata), size-validate every
+        downgrade stream - WITHOUT touching the leaf, the rung map, or
+        the ledger.  Returns the plan :meth:`_commit_leaf` executes; a
+        raise here leaves the store bit-identical (the caller evicts the
+        plan's ``fetched`` list).  Committing a validated plan cannot
+        fail, which is what makes multi-leaf switches all-or-nothing."""
+        leaf: NestedTensor = self._flat[self._leaf_index[path]]
+        cur = leaf.resident_levels
+        streams = self._leaf_streams[path]
+        plan = {"path": path, "cur": cur, "target": target,
+                "words": {}, "fetched": [], "pin": 0, "pout": 0}
+        lvl = cur
+        try:
+            while lvl < target:
+                words = self.pager.fetch(path, lvl)
+                plan["fetched"].append(lvl)
+                got = int(words.size) * words.dtype.itemsize
+                if got != streams[1 + lvl]:
+                    raise RuntimeError(
+                        f"pager returned {got} bytes for {path} delta {lvl}; "
+                        f"metadata says bytes(delta_{lvl}) = {streams[1 + lvl]}")
+                plan["words"][lvl] = words
+                plan["pin"] += got
+                lvl += 1
+        except BaseException:
+            for l in plan["fetched"]:
+                self.pager.evict(path, l)
+            raise
+        while lvl > target:
+            lvl -= 1
+            d = leaf.deltas[lvl]
+            got = int(d.size) * d.dtype.itemsize
+            if got != streams[1 + lvl]:
+                for l in plan["fetched"]:
+                    self.pager.evict(path, l)
+                raise RuntimeError(
+                    f"resident stream {lvl} of {path} holds {got} bytes; "
+                    f"metadata says bytes(delta_{lvl}) = {streams[1 + lvl]}")
+            plan["pout"] += got
+        return plan
+
+    def _abort_stage(self, plans: List[Dict[str, object]]) -> None:
+        """Roll back staged plans: re-evict every fetched stream.  The
+        leaves, rung map, and ledger were never touched, so this is the
+        WHOLE rollback."""
+        for plan in plans:
+            for lvl in plan["fetched"]:
+                self.pager.evict(plan["path"], lvl)
+
+    def _commit_leaf(self, plan: Dict[str, object]) -> None:
+        """COMMIT a staged plan: splice fetched streams in, evict
+        downgraded levels, stamp the leaf rung.  Pre-validated - cannot
+        fail."""
+        path = plan["path"]
+        i = self._leaf_index[path]
+        leaf: NestedTensor = self._flat[i]
+        ds = list(leaf.deltas)
+        for lvl, words in plan["words"].items():
+            ds[lvl] = words
+        for lvl in range(plan["cur"] - 1, plan["target"] - 1, -1):
+            self.pager.evict(path, lvl)
+            ds[lvl] = None
+        self._flat[i] = leaf.with_deltas(tuple(ds))
+        self._leaf_rungs[path] = plan["target"]
+
+    def _refresh_summary(self) -> None:
+        """Re-derive the tree-level rung/mode summary from the per-leaf
+        rung map (after a committed per-leaf switch)."""
+        uni = self._uniform_rung()
+        if uni is None:
+            self.rung = min(self._leaf_rungs.values())
+            self.mode = "mixed"
+        else:
+            self.rung = uni
+            self.mode = rung_to_mode(uni, self.num_rungs)
+
     # -- byte accounting ------------------------------------------------
     def bytes(self) -> Dict[str, int]:
         return dict(self._bytes)           # copy: callers may adjust theirs
@@ -418,6 +497,16 @@ class NestQuantStore:
         """Move residency to ``assignment``, ledgering each leaf's delta
         page-ins/outs EXACTLY (DESIGN.md Sec. 9).
 
+        ALL-OR-NOTHING (DESIGN.md Sec. 12): the switch first STAGES every
+        leaf's move - fetching and size-validating each upgrade stream,
+        validating each downgrade - with zero store mutation, then
+        COMMITS residency + ledger only once every leaf staged cleanly.
+        A failed fetch (undelivered segment, chaos fault, quarantine)
+        rolls back by re-evicting the staged streams and re-raises: the
+        serving tree, the rung map, ``resident_bytes`` and the ledger
+        read exactly as before the call, so the bytes(delta_k) exactness
+        invariant holds across failures.
+
         The uniform case delegates to :meth:`to_rung` (one tree-wide
         ledger event per adjacent step, the classic Table-11 form);
         otherwise one event per moved leaf, whose bytes are the exact sum
@@ -432,26 +521,23 @@ class NestQuantStore:
             self.to_rung(mode_to_rung(assignment.default, self.num_rungs))
         else:
             targets = self.resolve_assignment(assignment)
-            try:
-                for path in self._leaf_paths:
-                    cur, tgt = self._leaf_rungs[path], targets[path]
-                    if tgt == cur:
-                        continue
-                    pin, pout = self._page_leaf(path, tgt)
-                    self.ledger.record(page_in=pin, page_out=pout,
-                                       from_rung=cur, to_rung=tgt)
-            finally:
-                # a failed leaf move (undelivered segment) leaves that
-                # leaf untouched; re-derive the summary + serving tree so
-                # the store stays consistent with whatever DID move
-                uni = self._uniform_rung()
-                if uni is None:
-                    self.rung = min(self._leaf_rungs.values())
-                    self.mode = "mixed"
-                else:
-                    self.rung = uni
-                    self.mode = rung_to_mode(uni, self.num_rungs)
-                self._rebuild_tree()
+            moves = [(p, self._leaf_rungs[p], targets[p])
+                     for p in self._leaf_paths
+                     if targets[p] != self._leaf_rungs[p]]
+            plans = []
+            try:                        # phase 1: stage (no mutation)
+                for path, _, tgt in moves:
+                    plans.append(self._stage_leaf(path, tgt))
+            except BaseException:
+                self._abort_stage(plans)
+                raise
+            for (path, cur, tgt), plan in zip(moves, plans):
+                self._commit_leaf(plan)  # phase 2: commit (cannot fail)
+                self.ledger.record(page_in=plan["pin"],
+                                   page_out=plan["pout"],
+                                   from_rung=cur, to_rung=tgt)
+            self._refresh_summary()
+            self._rebuild_tree()
         return {"page_in": self.ledger.page_in_bytes - before_in,
                 "page_out": self.ledger.page_out_bytes - before_out,
                 "moves": len(self.ledger.events) - before_ev}
@@ -462,50 +548,91 @@ class NestQuantStore:
         ledgering the OBSERVED bytes - asserted equal to the computed
         bytes(delta_k) per step (Table 11, K-rung).  From a MIXED state
         this delegates to :meth:`apply` so each leaf's walk is ledgered
-        exactly."""
+        exactly.
+
+        ALL-OR-NOTHING across the WHOLE walk (DESIGN.md Sec. 12): every
+        adjacent step is staged - all fetches done and size-validated,
+        per-step totals checked against bytes(delta_k) - before anything
+        commits.  Any failure re-evicts all staged streams and re-raises
+        with the store bit-identical to before the call: rung, mode,
+        per-leaf residency, and ledger untouched (the pre-Sec.-12 walk
+        committed completed steps, stranding the store between rungs)."""
         rung = mode_to_rung(rung, self.num_rungs)
         if self.is_mixed:
             self.apply(RungAssignment.uniform(rung))
             return self
-        while self.rung < rung:
-            k = self.rung
-            obs = 0
-            moved = []
-            try:
+        # phase 1: stage the whole walk.  Upgrades fetch + validate every
+        # stream; downgrades validate resident sizes.  No store mutation.
+        words: Dict[Tuple[str, int], jax.Array] = {}
+        fetched: List[Tuple[str, int]] = []
+        steps: List[Tuple[int, int, int]] = []   # (k, to, observed bytes)
+        try:
+            for k in range(self.rung, rung):               # upgrade steps
+                obs = 0
                 for path in self._leaf_paths:
                     if k < len(self._leaf_streams[path]) - 1:
-                        pin, _ = self._page_leaf(path, k + 1)
-                        moved.append(path)
-                        obs += pin
+                        w = self.pager.fetch(path, k)
+                        fetched.append((path, k))
+                        got = int(w.size) * w.dtype.itemsize
+                        if got != self._leaf_streams[path][1 + k]:
+                            raise RuntimeError(
+                                f"pager returned {got} bytes for {path} "
+                                f"delta {k}; metadata says bytes(delta_{k})"
+                                f" = {self._leaf_streams[path][1 + k]}")
+                        words[(path, k)] = w
+                        obs += got
                 if obs != self.delta_bytes(k):
                     raise RuntimeError(
                         f"upgrade {k}->{k + 1} observed {obs} bytes moved; "
                         f"computed bytes(delta_{k}) = {self.delta_bytes(k)}")
-            except BaseException:
-                # transactional step: a failed fetch (segment not yet
-                # delivered) undoes this step's page-ins so the store
-                # stays uniformly at rung k, consistent and serving
-                for path in moved:
-                    self._page_leaf(path, k)
-                self._rebuild_tree()
-                raise
-            self.ledger.record(page_in=obs, page_out=0,
-                               from_rung=k, to_rung=k + 1)
-            self.rung = k + 1
-        while self.rung > rung:
-            k = self.rung - 1
-            obs = 0
+                steps.append((k, k + 1, obs))
+            for k in range(self.rung - 1, rung - 1, -1):   # downgrade steps
+                obs = 0
+                for path in self._leaf_paths:
+                    if k < len(self._leaf_streams[path]) - 1:
+                        d = self._flat[self._leaf_index[path]].deltas[k]
+                        got = int(d.size) * d.dtype.itemsize
+                        if got != self._leaf_streams[path][1 + k]:
+                            raise RuntimeError(
+                                f"resident stream {k} of {path} holds {got} "
+                                f"bytes; metadata says bytes(delta_{k}) = "
+                                f"{self._leaf_streams[path][1 + k]}")
+                        obs += got
+                if obs != self.delta_bytes(k):
+                    raise RuntimeError(
+                        f"downgrade {k + 1}->{k} observed {obs} bytes moved; "
+                        f"computed bytes(delta_{k}) = {self.delta_bytes(k)}")
+                steps.append((k + 1, k, obs))
+        except BaseException:
+            # rollback = drop the stage: leaves/rung map/ledger were
+            # never touched, so re-evicting the fetches restores the
+            # store bit-identically
+            for path, lvl in fetched:
+                self.pager.evict(path, lvl)
+            raise
+        # phase 2: commit (cannot fail) - splice/evict each staged step,
+        # one ledger event per adjacent step, the classic Table-11 form
+        new_ds = {path: list(self._flat[self._leaf_index[path]].deltas)
+                  for path in self._leaf_paths}
+        for frm, to, obs in steps:
+            k = min(frm, to)
             for path in self._leaf_paths:
                 if k < len(self._leaf_streams[path]) - 1:
-                    _, pout = self._page_leaf(path, k)
-                    obs += pout
-            if obs != self.delta_bytes(k):
-                raise RuntimeError(
-                    f"downgrade {k + 1}->{k} observed {obs} bytes moved; "
-                    f"computed bytes(delta_{k}) = {self.delta_bytes(k)}")
-            self.ledger.record(page_in=0, page_out=obs,
-                               from_rung=k + 1, to_rung=k)
-            self.rung = k
+                    if to > frm:                           # upgrade
+                        new_ds[path][k] = words[(path, k)]
+                        self._leaf_rungs[path] = to
+                    else:                                  # downgrade
+                        self.pager.evict(path, k)
+                        new_ds[path][k] = None
+                        self._leaf_rungs[path] = min(
+                            to, len(self._leaf_streams[path]) - 1)
+            self.ledger.record(page_in=obs if to > frm else 0,
+                               page_out=obs if to < frm else 0,
+                               from_rung=frm, to_rung=to)
+            self.rung = to
+        for path in self._leaf_paths:
+            i = self._leaf_index[path]
+            self._flat[i] = self._flat[i].with_deltas(tuple(new_ds[path]))
         self.mode = rung_to_mode(self.rung, self.num_rungs)
         self._rebuild_tree()
         return self

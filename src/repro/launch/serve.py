@@ -21,6 +21,13 @@
   # burst trace; the engine downshifts under backlog and climbs back
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
       --bits 8,6,4 --trace burst --requests 200 --new-tokens 2 --policy load
+
+  # serving through failures (DESIGN.md Sec. 12): inject seeded delta-link
+  # faults under the same trace; switches that exhaust retries roll back
+  # and the failure-aware policy pins serving to the healthy rung
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+      --bits 8,6,4 --trace burst --requests 200 --new-tokens 2 \
+      --policy failure --chaos --chaos-transient 0.3
 """
 from __future__ import annotations
 
@@ -51,10 +58,14 @@ def main(argv=None):
                     help="declarative QuantRecipe JSON (per-layer ladders; "
                          "overrides --bits/--n/--h)")
     ap.add_argument("--policy", default="budget",
-                    choices=("budget", "hysteresis", "quality", "load"),
+                    choices=("budget", "hysteresis", "quality", "load",
+                             "failure"),
                     help="rung policy driving the engine (default: budget; "
                          "'load' = backlog-driven LoadAdaptivePolicy wrapped "
-                         "in hysteresis - the natural pick with --trace)")
+                         "in hysteresis - the natural pick with --trace; "
+                         "'failure' = the load stack wrapped in "
+                         "FailureAwarePolicy, which holds upgrades below the "
+                         "deliverable ceiling after delivery faults)")
     ap.add_argument("--dwell", type=int, default=4,
                     help="hysteresis dwell window (decisions)")
     ap.add_argument("--quality-floor", type=float, default=20.0,
@@ -85,12 +96,27 @@ def main(argv=None):
     ap.add_argument("--link-mbps", type=float, default=None,
                     help="with --artifact: simulate paging over an N Mbit/s "
                          "link (ThrottledPager) and report transfer seconds")
+    ap.add_argument("--chaos", action="store_true",
+                    help="inject seeded faults on the delta-paging link "
+                         "(ChaosPager) and fetch through retry + CRC "
+                         "re-verification (ResilientPager); DESIGN.md Sec. 12")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="fault-injection seed (default 0)")
+    ap.add_argument("--chaos-transient", type=float, default=0.2,
+                    help="per-fetch transient failure probability")
+    ap.add_argument("--chaos-corrupt", type=float, default=0.05,
+                    help="per-fetch CRC-corrupting bit-flip probability")
+    ap.add_argument("--chaos-stall", type=float, default=0.05,
+                    help="per-fetch stall probability (stalls burn virtual "
+                         "time on the scheduler clock)")
+    ap.add_argument("--retry-attempts", type=int, default=4,
+                    help="with --chaos: ResilientPager attempts per fetch")
     args = ap.parse_args(argv)
-    if args.policy == "load" and not args.trace:
+    if args.policy in ("load", "failure") and not args.trace:
         # the budget-schedule path reports the batch size as queue_depth,
         # which would read as permanent backlog pressure to the load policy
-        ap.error("--policy load needs real traffic signals: use it with "
-                 "--trace poisson|burst|diurnal")
+        ap.error(f"--policy {args.policy} needs real traffic signals: use "
+                 "it with --trace poisson|burst|diurnal")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -101,11 +127,40 @@ def main(argv=None):
     batch_cap = args.max_batch if args.trace else args.requests
 
     def build_policy():
-        from ..api import HysteresisPolicy
+        from ..api import FailureAwarePolicy, HysteresisPolicy
+        if args.policy == "failure":
+            inner = HysteresisPolicy(
+                make_policy("load", high_depth=args.max_batch),
+                dwell=args.dwell)
+            return FailureAwarePolicy(inner)
         pol = make_policy(args.policy, **pkw)
         if args.policy == "load":      # damp thrash around capacity edges
             pol = HysteresisPolicy(pol, dwell=args.dwell)
         return pol
+
+    clock = None
+    chaos_state = {}
+
+    def chaosify(pager):
+        """Wrap the delta link in ChaosPager -> ResilientPager on a
+        virtual clock shared with the Scheduler (so outage windows and
+        backoff track serving time)."""
+        if not args.chaos:
+            return pager
+        nonlocal clock
+        from ..api import ChaosPager, ResilientPager, RetryPolicy, VirtualClock
+        clock = VirtualClock()
+        chaos = ChaosPager(pager, seed=args.chaos_seed,
+                           p_transient=args.chaos_transient,
+                           p_corrupt=args.chaos_corrupt,
+                           p_stall=args.chaos_stall, stall_s=2e-4,
+                           clock=clock)
+        resilient = ResilientPager(
+            chaos, RetryPolicy(max_attempts=args.retry_attempts,
+                               backoff_base_s=1e-4, quarantine_s=2e-3),
+            seed=args.chaos_seed + 1)
+        chaos_state.update(chaos=chaos, resilient=resilient)
+        return resilient
 
     if args.artifact:
         from ..api import FilePager, ThrottledPager, open_artifact
@@ -115,7 +170,7 @@ def main(argv=None):
             pager = ThrottledPager(pager,
                                    bandwidth_bytes_per_s=args.link_mbps * 125e3)
         engine = ServeEngine.from_artifact(
-            cfg, art, pager=pager, max_batch=batch_cap, max_len=64,
+            cfg, art, pager=chaosify(pager), max_batch=batch_cap, max_len=64,
             dtype=jax.numpy.float32, policy=build_policy())
         store = engine.store
         print(f"[artifact] cold boot read "
@@ -144,7 +199,12 @@ def main(argv=None):
                 print(f"[artifact] {seg['file']}: {seg['nbytes']/1e6:.2f}MB")
             print(f"[artifact] wrote {args.save_artifact}")
             return
-        store = NestQuantStore(nested, mode="part", dtype=jax.numpy.float32)
+        pager = None
+        if args.chaos:
+            from ..storage.pager import InMemoryPager
+            pager = chaosify(InMemoryPager.from_tree(nested))
+        store = NestQuantStore(nested, mode="part", dtype=jax.numpy.float32,
+                               pager=pager)
         engine = ServeEngine(cfg, store, max_batch=batch_cap, max_len=64,
                              policy=build_policy())
 
@@ -174,13 +234,23 @@ def main(argv=None):
               + (f", {burst:.0f} req/s burst" if args.trace == "burst"
                  else ""))
         report = Scheduler(engine, trace, svc,
-                           max_batch=args.max_batch).run()
+                           max_batch=args.max_batch, clock=clock).run()
         print("[load] " + report.table())
         for rec in report.switch_records:
             print(f"  step {rec['step']}: rung {rec['from_rung']} -> "
                   f"{rec['to_rung']}: in {rec['page_in']/1e6:.2f}MB "
                   f"out {rec['page_out']/1e6:.2f}MB "
                   f"(= computed bytes(delta_k))")
+        if args.chaos:
+            ch, rs = chaos_state["chaos"], chaos_state["resilient"]
+            f = ch.faults
+            print(f"[chaos] fetches={ch.fetches} "
+                  f"transient={f['transient']} corrupt={f['corrupt']} "
+                  f"stall={f['stall']} outage={f['outage']}; "
+                  f"retries={rs.retries} quarantines={rs.quarantines} "
+                  f"failed_switches={engine.stats.switch_failures} "
+                  f"(all requests served: {len(report.requests)}"
+                  f"/{args.requests})")
         return
 
     rng = np.random.default_rng(0)

@@ -1,5 +1,6 @@
 from .engine import EngineStats, Request, ServeEngine
-from .policies import (POLICIES, BudgetPolicy, HysteresisPolicy,
+from .policies import (POLICIES, BudgetPolicy, DeliveryHealth,
+                       FailureAwarePolicy, HysteresisPolicy,
                        LoadAdaptivePolicy, QualityFloorPolicy, ResourceSignal,
                        RungPolicy, SignalTracker, StaticRungPolicy,
                        make_policy, simulate_policy)

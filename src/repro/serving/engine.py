@@ -24,7 +24,16 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from ..core.switching import NestQuantStore
 from ..models.model import Model, make_model
+from ..storage.artifact import ArtifactError
+from ..storage.pager import PagerError
 from .policies import BudgetPolicy, ResourceSignal, RungPolicy, SignalTracker
+
+# what a failed rung switch looks like to the engine: every pager-tier
+# fault (transient, corrupt, quarantine) plus artifact-tier errors from
+# undelivered / corrupted segments.  Rollback in the store (DESIGN.md
+# Sec. 12) guarantees the current residency survived, so the engine can
+# always keep serving at the rung it already has.
+SWITCH_FAILURES = (PagerError, ArtifactError)
 
 # mode_history is a diagnostic ring, not a ledger: the SwitchLedger keeps
 # the exact per-move accounting, so the engine only retains a recent
@@ -46,6 +55,10 @@ class EngineStats:
     prefills: int = 0
     decode_steps: int = 0
     switches: int = 0
+    # degraded-mode counters (DESIGN.md Sec. 12): switch attempts that
+    # failed and rolled back, and the last failure's message (diagnostic)
+    switch_failures: int = 0
+    last_failure: str = ""
     mode_history: deque = field(
         default_factory=lambda: deque(maxlen=MODE_HISTORY_CAP))
     mode_counts: Dict[str, int] = field(default_factory=dict)
@@ -108,14 +121,26 @@ class ServeEngine:
         "page in lower-bit weights when resources allow" as a control
         loop).  Call it whenever the transport may have delivered more
         segments; serving keeps working between polls at whatever rung
-        has landed.  Returns {'from_rung', 'rung', 'modes', 'page_in'}
-        for this poll alone (page_in = observed bytes, ledgered)."""
+        has landed.  A climb step that FAILS (chaos fault, late
+        corruption) rolls back in the store (DESIGN.md Sec. 12) and ends
+        this poll - the engine stays pinned at the highest rung that
+        actually committed and the next poll re-probes.  Returns
+        {'from_rung', 'rung', 'modes', 'page_in', 'failed'} for this
+        poll alone (page_in = observed bytes, ledgered)."""
         start = self.store.rung
         in0 = self.store.ledger.page_in_bytes
         reached: List[str] = []
+        failed = ""
         while (self.store.rung < self.store.num_rungs - 1
                and self.store.max_available_rung() > self.store.rung):
-            self.store.to_rung(self.store.rung + 1)
+            try:
+                self.store.to_rung(self.store.rung + 1)
+            except SWITCH_FAILURES as e:
+                failed = str(e)
+                self.stats.switch_failures += 1
+                self.stats.last_failure = failed
+                self._tracker.note(False, failed=True)
+                break
             self.stats.switches += 1
             self.stats.record_mode(self.store.mode)
             reached.append(self.store.mode)
@@ -123,7 +148,8 @@ class ServeEngine:
             self._params = self.store.params()
         return {"from_rung": start, "rung": self.store.rung,
                 "modes": reached,
-                "page_in": self.store.ledger.page_in_bytes - in0}
+                "page_in": self.store.ledger.page_in_bytes - in0,
+                "failed": failed}
 
     # -- switching ---------------------------------------------------------
     def ensure_mode(self, memory_budget_bytes: Optional[int] = None,
@@ -141,11 +167,31 @@ class ServeEngine:
         is not a switch.  The scalar-budget call form is unchanged from
         the pre-policy API; ``queue_depth``/``backlog_age_s`` are the
         traffic half of the signal - the Scheduler (DESIGN.md Sec. 11)
-        feeds them from its real request queue."""
-        signal = self._tracker.signal(memory_budget_bytes=memory_budget_bytes,
-                                      queue_depth=queue_depth,
-                                      backlog_age_s=backlog_age_s)
-        report = self.store.apply(self.policy.decide(self.store, signal))
+        feeds them from its real request queue.
+
+        DEGRADED MODE (DESIGN.md Sec. 12): a switch attempt that fails
+        rolls back all-or-nothing in the store, so the engine catches
+        pager/artifact faults, notes the failure in the tracker (the
+        next signal's ``delivery_health`` carries it to the policy),
+        and KEEPS SERVING at the current residency - the highest rung
+        that is actually healthy.  No request is ever dropped because a
+        delta stream would not arrive."""
+        quarantined = getattr(self.store.pager, "quarantined", None)
+        signal = self._tracker.signal(
+            memory_budget_bytes=memory_budget_bytes,
+            queue_depth=queue_depth, backlog_age_s=backlog_age_s,
+            available_rung=self.store.max_available_rung(),
+            quarantined=len(quarantined()) if callable(quarantined) else 0)
+        try:
+            report = self.store.apply(self.policy.decide(self.store, signal))
+        except SWITCH_FAILURES as e:
+            self.stats.switch_failures += 1
+            self.stats.last_failure = str(e)
+            self._tracker.note(False, failed=True)
+            if self._params is None:    # first pickup cannot have staged
+                self._params = self.store.params()
+            self.stats.record_mode(self.store.mode)
+            return self.store.mode
         changed = report["moves"] > 0
         self._tracker.note(changed)
         if changed:

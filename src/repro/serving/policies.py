@@ -20,6 +20,10 @@ while the MLP stays at INT4.  Shipped policies:
     (DESIGN.md Sec. 11); the Scheduler feeds it real queue signals.
   * :class:`StaticRungPolicy` - pin one rung forever (the fixed
     operating point the load-adaptive benchmarks compare against).
+  * :class:`FailureAwarePolicy` - wraps any policy; clamps upgrades to
+    the rungs the pager can actually deliver and, after a delivery
+    failure, holds further upgrades for a cooldown window before
+    re-probing one rung at a time (DESIGN.md Sec. 12).
 
 Policies see the store read-only; the engine (or
 :func:`simulate_policy`) applies the returned assignment and ledgers the
@@ -41,6 +45,29 @@ from ..core.switching import NestQuantStore, RungAssignment
 
 
 @dataclass(frozen=True)
+class DeliveryHealth:
+    """How delta delivery has been behaving (DESIGN.md Sec. 12).
+
+    The engine's :class:`SignalTracker` accumulates the failure counters
+    from caught switch failures; ``available_rung`` is the pager's
+    deliverable ceiling at decision time (``store.max_available_rung()``,
+    which a quarantining :class:`~repro.storage.pager.ResilientPager`
+    lowers while streams are quarantined) and ``quarantined`` how many
+    streams are currently fenced off.  ``consecutive_failures`` resets
+    only when a switch actually COMMITS - a decision that merely holds
+    proves nothing about the link."""
+    failures: int = 0                         # total failed switch attempts
+    consecutive_failures: int = 0             # since the last committed move
+    last_failure_step: Optional[int] = None   # tracker step of the latest
+    quarantined: int = 0                      # streams currently quarantined
+    available_rung: Optional[int] = None      # pager's deliverable ceiling
+
+    @property
+    def healthy(self) -> bool:
+        return self.consecutive_failures == 0 and self.quarantined == 0
+
+
+@dataclass(frozen=True)
 class ResourceSignal:
     """What the serving environment looks like at one decision point.
 
@@ -50,12 +77,15 @@ class ResourceSignal:
     ``queue_depth`` is the request backlog NOT covered by the batch being
     admitted and ``backlog_age_s`` how long its oldest request has been
     waiting - the serving Scheduler (DESIGN.md Sec. 11) produces both
-    from real traffic."""
+    from real traffic.  ``delivery_health`` carries the delta-delivery
+    failure record (DESIGN.md Sec. 12) so failure-aware policies can
+    stop upgrading into a broken link."""
     memory_budget_bytes: Optional[int] = None
     queue_depth: int = 0
     step: int = 0
     recent_switches: Tuple[int, ...] = ()
     backlog_age_s: float = 0.0
+    delivery_health: DeliveryHealth = DeliveryHealth()
 
 
 @runtime_checkable
@@ -240,14 +270,61 @@ class QualityFloorPolicy:
                               exact=tuple(raised.items()))
 
 
+class FailureAwarePolicy:
+    """Failure-aware wrapper (DESIGN.md Sec. 12): never upgrade into a
+    link that is failing.
+
+    Two clamps on top of any inner policy, downgrades always passing
+    untouched (shedding residency needs no fetches, so it cannot fail):
+
+    * **availability** - upgrade targets are capped at the pager's
+      deliverable ceiling (``delivery_health.available_rung``, falling
+      back to ``store.max_available_rung()``).  A quarantining
+      :class:`~repro.storage.pager.ResilientPager` lowers that ceiling
+      while a stream is fenced off, so the policy stops aiming above it;
+      leaves already resident ABOVE the ceiling are held, not shed.
+    * **cooldown** - after a delivery failure, upgrades hold for
+      ``cooldown`` further decisions; once it expires the next upgrade
+      re-probes the link one adjacent rung at a time (the inner policy's
+      step size), rather than leaping back to the top of a ladder the
+      link just proved it cannot carry."""
+
+    def __init__(self, inner: Optional[RungPolicy] = None,
+                 cooldown: int = 8):
+        if cooldown < 0:
+            raise ValueError(f"cooldown must be >= 0, got {cooldown}")
+        self.inner = inner if inner is not None else LoadAdaptivePolicy()
+        self.cooldown = cooldown
+
+    def decide(self, store: NestQuantStore,
+               signal: ResourceSignal) -> RungAssignment:
+        want = self.inner.decide(store, signal)
+        dh = signal.delivery_health
+        cur = store.leaf_rungs()
+        tgt = store.resolve_assignment(want)
+        avail = (dh.available_rung if dh.available_rung is not None
+                 else store.max_available_rung())
+        in_cooldown = (dh.last_failure_step is not None
+                       and signal.step - dh.last_failure_step
+                       < self.cooldown)
+        out = {}
+        for p, r in tgt.items():
+            if r > cur[p]:                     # upgrade: clamp to health
+                r = cur[p] if in_cooldown else min(r, max(avail, cur[p]))
+            out[p] = r
+        if out == tgt:
+            return want
+        return RungAssignment(default=store.rung, exact=tuple(out.items()))
+
+
 POLICIES = {"budget": BudgetPolicy, "hysteresis": HysteresisPolicy,
             "quality": QualityFloorPolicy, "load": LoadAdaptivePolicy,
-            "static": StaticRungPolicy}
+            "static": StaticRungPolicy, "failure": FailureAwarePolicy}
 
 
 def make_policy(name: str, **kwargs) -> RungPolicy:
-    """CLI-facing factory:
-    'budget' | 'hysteresis' | 'quality' | 'load' | 'static'."""
+    """CLI-facing factory: 'budget' | 'hysteresis' | 'quality' | 'load'
+    | 'static' | 'failure'."""
     if name not in POLICIES:
         raise ValueError(f"unknown policy {name!r}; pick from "
                          f"{sorted(POLICIES)}")
@@ -255,25 +332,45 @@ def make_policy(name: str, **kwargs) -> RungPolicy:
 
 
 class SignalTracker:
-    """Builds :class:`ResourceSignal`s with a monotone step counter and
-    the recent-switch history policies key their dwell windows on.  The
-    engine owns one; :func:`simulate_policy` owns one per run."""
+    """Builds :class:`ResourceSignal`s with a monotone step counter, the
+    recent-switch history policies key their dwell windows on, and the
+    delivery-failure record behind :class:`DeliveryHealth` (DESIGN.md
+    Sec. 12).  The engine owns one; :func:`simulate_policy` owns one per
+    run."""
 
     def __init__(self, history: int = 16):
         self.step = 0
         self.switch_steps: deque = deque(maxlen=history)
+        self.delivery_failures = 0
+        self.consecutive_failures = 0
+        self.last_failure_step: Optional[int] = None
 
     def signal(self, memory_budget_bytes: Optional[int] = None,
-               queue_depth: int = 0,
-               backlog_age_s: float = 0.0) -> ResourceSignal:
+               queue_depth: int = 0, backlog_age_s: float = 0.0,
+               available_rung: Optional[int] = None,
+               quarantined: int = 0) -> ResourceSignal:
+        health = DeliveryHealth(
+            failures=self.delivery_failures,
+            consecutive_failures=self.consecutive_failures,
+            last_failure_step=self.last_failure_step,
+            quarantined=quarantined, available_rung=available_rung)
         return ResourceSignal(memory_budget_bytes=memory_budget_bytes,
                               queue_depth=queue_depth, step=self.step,
                               recent_switches=tuple(self.switch_steps),
-                              backlog_age_s=backlog_age_s)
+                              backlog_age_s=backlog_age_s,
+                              delivery_health=health)
 
-    def note(self, moved: bool):
-        """Advance one decision, remembering whether residency changed."""
-        if moved:
+    def note(self, moved: bool, failed: bool = False):
+        """Advance one decision, remembering whether residency changed
+        (``moved``) or a switch attempt failed and rolled back
+        (``failed``).  Only a COMMITTED move clears the consecutive
+        failure streak - a hold proves nothing about the link."""
+        if failed:
+            self.delivery_failures += 1
+            self.consecutive_failures += 1
+            self.last_failure_step = self.step
+        elif moved:
+            self.consecutive_failures = 0
             self.switch_steps.append(self.step)
         self.step += 1
 

@@ -304,6 +304,19 @@ class SchedulerReport:
     def page_out_bytes(self) -> int:
         return sum(rec["page_out"] for rec in self.switch_records)
 
+    @property
+    def switch_failures(self) -> int:
+        """Switch attempts that failed and rolled back during the run
+        (DESIGN.md Sec. 12) - every one of them served through."""
+        return sum(int(s.get("switch_failures", 0)) for s in self.steps)
+
+    @property
+    def fault_s(self) -> float:
+        """Virtual seconds the fetch path burned in stalls and retry
+        backoff (0.0 unless the run was clock-coupled to a chaos
+        stack)."""
+        return sum(float(s.get("fault_s", 0.0)) for s in self.steps)
+
     def summary(self) -> Dict[str, object]:
         lat = self.latency("total")
         return {"trace": self.trace_kind, "requests": len(self.requests),
@@ -318,7 +331,9 @@ class SchedulerReport:
                 "switch_moves": sum(int(r["moves"])
                                     for r in self.switch_records),
                 "page_in_mb": self.page_in_bytes / 1e6,
-                "page_out_mb": self.page_out_bytes / 1e6}
+                "page_out_mb": self.page_out_bytes / 1e6,
+                "switch_failures": self.switch_failures,
+                "fault_s": self.fault_s}
 
     def table(self) -> str:
         """The p95 / rung-occupancy table, print-ready."""
@@ -350,14 +365,26 @@ class Scheduler:
     throwaway clones of the last admitted request so jax sees one batch
     shape per mode (fillers are flagged in ``stats.sched_filler``,
     never returned, and cost nothing on the virtual clock - one decode
-    step streams the weights once regardless of batch rows)."""
+    step streams the weights once regardless of batch rows).
+
+    ``clock`` (DESIGN.md Sec. 12) couples the scheduler's virtual time
+    to the storage tier: pass the :class:`~repro.storage.pager.
+    VirtualClock` a :class:`~repro.storage.pager.ChaosPager` /
+    :class:`~repro.storage.pager.ResilientPager` stack runs on and each
+    step first advances that clock to ``now`` (so outage windows open
+    and close on the serving timeline), then charges whatever stall /
+    backoff time the fetch path consumed back onto the step as
+    ``fault_s``.  The scheduler NEVER drops a request: a failed switch
+    rolls back in the store, the engine keeps serving at the healthy
+    residency, and the backlog drains at whatever rung survives
+    (``summary()['switch_failures']`` counts the attempts)."""
 
     def __init__(self, engine: ServeEngine, trace: LoadGenerator,
                  service: Optional[ServiceModel] = None,
                  max_batch: Optional[int] = None,
                  admit_wait_s: float = 0.01,
                  memory_budget_bytes: Optional[int] = None,
-                 bucket_batches: bool = True):
+                 bucket_batches: bool = True, clock=None):
         if max_batch is None:
             max_batch = engine.max_batch
         if max_batch > engine.max_batch:
@@ -375,6 +402,7 @@ class Scheduler:
         self.admit_wait_s = admit_wait_s
         self.memory_budget_bytes = memory_budget_bytes
         self.bucket_batches = bucket_batches
+        self.clock = clock
 
     def run(self) -> SchedulerReport:
         eng, store = self.engine, self.engine.store
@@ -424,8 +452,25 @@ class Scheduler:
             ev0 = len(store.ledger.events)
             rungs_before = store.leaf_rungs()
             rung_before = store.rung
+            failures0 = eng.stats.switch_failures
+            fault_s = 0.0
+            t0 = now
+            if self.clock is not None:
+                # open/close outage windows on the serving timeline; any
+                # stall or retry backoff the fetch path burns during this
+                # step comes back as fault_s and is charged below
+                self.clock.set(now)
+                t0 = self.clock.now()  # may run AHEAD of now: set() is
+                # monotone and fault sleeps only ever push it forward
+            # the pager's deliverable ceiling AT this step (outages and
+            # quarantines lower it; DESIGN.md Sec. 12) - recorded so runs
+            # can show rung availability through a fault window
+            avail_rung = store.max_available_rung()
             eng.generate(reqs, self.memory_budget_bytes,
                          queue_depth=depth, backlog_age_s=age)
+            if self.clock is not None:
+                fault_s = self.clock.now() - t0
+            failed = eng.stats.switch_failures - failures0
             moved = store.ledger.events[ev0:]
             page_in = sum(e[2] for e in moved)
             page_out = sum(e[3] for e in moved)
@@ -447,7 +492,7 @@ class Scheduler:
                      "expected_in": expect_in, "expected_out": expect_out})
             # -- advance the virtual clock ---------------------------------
             switch_s = self.service.switch_seconds(page_in + page_out,
-                                                   len(moved))
+                                                   len(moved)) + fault_s
             batch_s = self.service.batch_seconds(
                 store.resident_bytes(),
                 max(s.request.max_new_tokens for s in batch))
@@ -466,7 +511,9 @@ class Scheduler:
                           "backlog_age_s": age, "mode": store.mode,
                           "rung": store.rung, "page_in": page_in,
                           "page_out": page_out, "switch_s": switch_s,
-                          "batch_s": batch_s})
+                          "batch_s": batch_s, "fault_s": fault_s,
+                          "switch_failures": failed,
+                          "avail_rung": avail_rung, "clock_s": t0})
         return SchedulerReport(requests=done, steps=steps,
                                switch_records=switch_records, elapsed_s=now,
                                trace_kind=self.trace.kind)

@@ -1,5 +1,8 @@
 """Storage/transport tier: artifacts, delta pagers, progressive delivery
-(DESIGN.md Sec. 10)."""
+(DESIGN.md Sec. 10), fault injection + hardened delivery (Sec. 12)."""
 from .artifact import (Artifact, ArtifactError, load_store, open_artifact,
                        save_artifact)
-from .pager import DeltaPager, FilePager, InMemoryPager, ThrottledPager
+from .pager import (ChaosPager, CorruptStreamError, DeltaPager, FilePager,
+                    InMemoryPager, Outage, PagerError, ResilientPager,
+                    RetryPolicy, StreamHealth, ThrottledPager,
+                    TransientPagerError, VirtualClock, WallClock)

@@ -296,9 +296,14 @@ class Artifact:
         if len(raw) != spec["nbytes"]:
             raise ArtifactError(f"short read in {spec['segment']!r} at "
                                 f"offset {spec['offset']}")
-        if verify and zlib.crc32(raw) != spec["crc32"]:
-            raise ArtifactError(f"CRC-32 mismatch in {spec['segment']!r} at "
-                                f"offset {spec['offset']} (corrupted artifact)")
+        if verify:
+            observed = zlib.crc32(raw)
+            if observed != spec["crc32"]:
+                from .pager import CorruptStreamError   # lazy: no cycle
+                raise CorruptStreamError(
+                    f"CRC-32 mismatch in {spec['segment']!r} at offset "
+                    f"{spec['offset']}: expected {spec['crc32']:#010x}, "
+                    f"observed {observed:#010x} (corrupted artifact)")
         return np.frombuffer(raw, dtype=_resolve_dtype(spec["dtype"])) \
                  .reshape(spec["shape"])
 

