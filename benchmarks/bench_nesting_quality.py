@@ -15,7 +15,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core import nest_quantize, nest_quantize_tree, materialize, sqnr_db
+from repro.core import (NestedTensor, QuantRecipe, chain_decompose,
+                        chain_recompose, materialize, nest_quantize,
+                        nest_quantize_tree, quantize, search_recipe, sqnr_db)
+from repro.core.search import calibration_batch
+from repro.core.similarity import quality_report
 from repro.data import DataConfig, SyntheticLM
 from repro.models import make_model
 from repro.optim import adamw
@@ -85,6 +89,98 @@ def small_model_agreement():
     emit("alg1_nest_quantize_tree", t_nest, "whole-model Algorithm 1")
 
 
+def _tree_point(nested, params, rung):
+    """(resident_bytes, sqnr_db, pearson) of the whole quantized tree at
+    ``rung`` (clamped per leaf to its own ladder depth), scored on the
+    SAME seeded calibration batches the recipe search uses."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    fp = {jax.tree_util.keystr(p): w for p, w in flat}
+    nflat, _ = jax.tree_util.tree_flatten_with_path(
+        nested, is_leaf=lambda x: isinstance(x, NestedTensor))
+    total = sig = noise = 0.0
+    pears = []
+    for p, leaf in nflat:
+        key = jax.tree_util.keystr(p)
+        if not isinstance(leaf, NestedTensor):
+            total += leaf.nbytes
+            continue
+        r = min(rung, leaf.top)
+        total += leaf.nbytes_base() + leaf.nbytes_scales() + \
+            sum(leaf.nbytes_delta(i) for i in range(r))
+        w = fp[key].astype(jnp.float32)
+        K, N = w.shape[-2], w.shape[-1]
+        x = calibration_batch(key, K, batch_size=32, seed=0)
+        y_fp = np.asarray(jnp.einsum("mk,bkn->bmn", x, w.reshape(-1, K, N)),
+                          np.float64)
+        w_r = leaf.rung_weight(r, jnp.float32).reshape(-1, K, N)
+        y_r = np.asarray(jnp.einsum("mk,bkn->bmn", x, w_r), np.float64)
+        sig += float((y_fp ** 2).sum())
+        noise += float(((y_fp - y_r) ** 2).sum())
+        pears.append(quality_report(y_fp, y_r)["pearson"])
+    db = 300.0 if noise <= 0 else float(10 * np.log10(sig / noise))
+    return int(total), db, float(np.mean(pears))
+
+
+def _assert_adaptive_exact(nested):
+    """The PR's exactness acceptance check: for every adaptively-rounded
+    tree, chain_recompose(chain_decompose(w_int)) lands bit-exactly on the
+    quantized codes AT EVERY RUNG (each level's 1-bit compensation is
+    lossless, so rung upgrades never lose codes)."""
+    leaves = [l for l in jax.tree_util.tree_leaves(
+        nested, is_leaf=lambda x: isinstance(x, NestedTensor))
+        if isinstance(l, NestedTensor)]
+    assert leaves, "no nested leaves to check"
+    for nt in leaves:
+        w_int = nt.codes_at(nt.top)
+        base, deltas = chain_decompose(w_int, nt.bits, method="adaptive")
+        assert bool(jnp.array_equal(
+            chain_recompose(base, deltas, nt.bits), w_int)), \
+            "adaptive chain_decompose -> chain_recompose is not bit-exact"
+        for r in range(nt.num_rungs):
+            got = chain_recompose(nt.codes_base(),
+                                  [nt.codes_delta(i) for i in range(r)],
+                                  nt.bits, r)
+            assert bool(jnp.array_equal(got, nt.codes_at(r))), \
+                f"packed ladder recomposition diverges at rung {r}"
+
+
+def searched_vs_uniform():
+    """The search payoff (DESIGN.md Sec. 13): a calibration-searched
+    adaptive recipe must PARETO-DOMINATE the uniform analytic ladder -
+    equal-or-better SQNR AND Pearson at equal-or-fewer resident bytes on
+    at least 2 rungs (hard assertion, CI-enforced)."""
+    rng = np.random.default_rng(7)
+    params = {}
+    for i, (shape, sc) in enumerate([((512, 256), 0.04), ((512, 256), 0.5),
+                                     ((256, 512), 0.01), ((512, 512), 0.1)]):
+        w = rng.normal(size=shape) * sc
+        w = np.where(rng.random(shape) < 0.003, w * 8, w)
+        params[f"layer{i}"] = {"w": jnp.asarray(w.astype(np.float32))}
+
+    chain = (8, 6, 4)
+    uniform = quantize(params, QuantRecipe(bits=chain, rounding="rtn"))
+    u_full, _, _ = _tree_point(uniform, params, 2)
+
+    result = search_recipe(params, budget_bytes=u_full, bits=chain,
+                           rounding="adaptive", seed=0)
+    searched = quantize(params, result.recipe)
+    _assert_adaptive_exact(searched)
+
+    dominated = 0
+    for r in range(len(chain)):
+        ub, udb, up = _tree_point(uniform, params, r)
+        sb, sdb, sp = _tree_point(searched, params, r)
+        dom = sb <= ub and sdb >= udb - 1e-9 and sp >= up - 1e-12
+        dominated += dom
+        emit(f"search_pareto_rung{r}", 0.0,
+             f"uniform={ub}B/{udb:.2f}dB/{up:.6f};"
+             f"searched={sb}B/{sdb:.2f}dB/{sp:.6f};dominates={int(dom)}")
+    assert dominated >= 2, \
+        f"searched recipe dominates on only {dominated} rung(s)"
+    emit("search_exactness", 0.0,
+         "adaptive chain_recompose bit-exact at every rung")
+
+
 def _all_logits(model, params, batch):
     from repro.models.model import _forward_seq, lm_logits
     h, _, _ = _forward_seq(params, batch, model.cfg, want_cache=False)
@@ -94,6 +190,7 @@ def _all_logits(model, params, batch):
 
 def run():
     layer_output_error()
+    searched_vs_uniform()
     small_model_agreement()
 
 

@@ -1,0 +1,94 @@
+"""BENCH_*.json schema gate: fail fast on shape regressions.
+
+CI uploads one JSON per benchmark suite as the commit's perf record; a
+silently malformed file (renamed rows, dropped fields, a suite that
+emitted nothing) would rot the trajectory without failing anything.
+This checker enforces the row contract ``benchmarks.common.emit`` writes:
+
+  * the file is a non-empty JSON list of objects;
+  * every row has exactly {name: str, us_per_call: number, derived: str}
+    with a finite, non-negative us_per_call;
+  * row names are unique-or-repeatable but never empty;
+  * no row is a ``FAILED:`` placeholder (a suite crash must fail CI via
+    run.py's exit code, not linger as data);
+  * every ``--require REGEX`` matches at least one row name (the per-bench
+    canary rows CI pins, e.g. the Pareto assertions of the nesting bench).
+
+  PYTHONPATH=src python -m benchmarks.check_schema BENCH_x.json \
+      --require 'search_pareto_rung[0-9]+' --require search_exactness
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import re
+import sys
+
+ROW_KEYS = {"name", "us_per_call", "derived"}
+
+
+def check_rows(rows, requires=()) -> list:
+    """Validate parsed rows; returns a list of error strings (empty = ok)."""
+    errors = []
+    if not isinstance(rows, list):
+        return [f"top level must be a JSON list, got {type(rows).__name__}"]
+    if not rows:
+        return ["no rows: the suite emitted nothing"]
+    names = []
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            errors.append(f"row {i}: not an object")
+            continue
+        if set(row) != ROW_KEYS:
+            errors.append(f"row {i}: keys {sorted(row)} != {sorted(ROW_KEYS)}")
+            continue
+        name, us, derived = row["name"], row["us_per_call"], row["derived"]
+        if not isinstance(name, str) or not name:
+            errors.append(f"row {i}: empty or non-string name")
+            continue
+        names.append(name)
+        if isinstance(us, bool) or not isinstance(us, (int, float)) or \
+                not math.isfinite(us) or us < 0:
+            errors.append(f"row {name!r}: bad us_per_call {us!r}")
+        if not isinstance(derived, str):
+            errors.append(f"row {name!r}: derived must be a string")
+        if isinstance(derived, str) and derived.startswith("FAILED:"):
+            errors.append(f"row {name!r}: suite-failure placeholder "
+                          f"({derived}) made it into the artifact")
+    for pat in requires:
+        if not any(re.search(pat, n) for n in names):
+            errors.append(f"required row /{pat}/ missing "
+                          f"(have: {sorted(set(names))[:12]}...)")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="+", metavar="BENCH.json")
+    ap.add_argument("--require", action="append", default=[],
+                    metavar="REGEX",
+                    help="row-name regex that must match >= 1 row "
+                         "(repeatable; applied to every file given)")
+    args = ap.parse_args(argv)
+    failed = False
+    for path in args.files:
+        try:
+            with open(path) as f:
+                rows = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"{path}: unreadable ({e})", file=sys.stderr)
+            failed = True
+            continue
+        errors = check_rows(rows, args.require)
+        if errors:
+            failed = True
+            for e in errors:
+                print(f"{path}: {e}", file=sys.stderr)
+        else:
+            print(f"{path}: ok ({len(rows)} rows)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,8 +23,10 @@ from __future__ import annotations
 from .configs import ARCHS, get_config
 from .core.nesting import (NestedTensor, critical_nested_bits, materialize,
                            nest_quantize, nest_quantize_tree, set_tree_rung)
-from .core.recipe import (LayerOverride, LeafSpec, QuantRecipe, quantize,
-                          recipe_summary)
+from .core.recipe import (LayerOverride, LeafSpec, QuantRecipe,
+                          exact_override, quantize, recipe_summary)
+from .core.search import (LayerSensitivity, RungScore, SearchResult,
+                          search_recipe)
 from .core.switching import (NestQuantStore, RungAssignment, SwitchLedger,
                              diverse_ladder_bytes)
 from .models import make_model
@@ -44,7 +46,10 @@ from .storage import (Artifact, ArtifactError, ChaosPager, CorruptStreamError,
 
 __all__ = [
     # recipes
-    "QuantRecipe", "LayerOverride", "LeafSpec", "quantize", "recipe_summary",
+    "QuantRecipe", "LayerOverride", "LeafSpec", "exact_override", "quantize",
+    "recipe_summary",
+    # calibration-driven recipe search (DESIGN.md Sec. 13)
+    "search_recipe", "SearchResult", "LayerSensitivity", "RungScore",
     # quantization core
     "NestedTensor", "nest_quantize", "nest_quantize_tree", "materialize",
     "set_tree_rung", "critical_nested_bits",

@@ -1,7 +1,8 @@
 """NestQuant core: the paper's contribution as a composable JAX module."""
 from .quantizer import (compute_scale, quantize_rtn, dequantize, perturbation,
                         int_range, sqnr_db)
-from .squant import adaptive_round, case_metric
+from .squant import (adaptive_round, case_metric, group_signed_error,
+                     is_floor_ceil)
 from .decompose import (split_high, split_low, recompose, decompose,
                         recompose_error, numerical_error_table, ROUNDINGS,
                         normalize_bits, ladder_gaps, delta_bits,
@@ -14,5 +15,9 @@ from .nesting import (NestedTensor, nest_quantize, nest_quantize_tree,
                       default_predicate, mode_to_rung, rung_to_mode)
 from .switching import (NestQuantStore, RungAssignment, SwitchLedger,
                         diverse_bitwidth_bytes, diverse_ladder_bytes)
-from .recipe import (LayerOverride, LeafSpec, QuantRecipe, quantize,
-                     recipe_summary)
+from .recipe import (LayerOverride, LeafSpec, QuantRecipe, exact_override,
+                     quantize, recipe_summary)
+from .search import (LayerSensitivity, RungScore, SearchResult,
+                     calibration_batch, default_calibration, score_layer,
+                     search_recipe)
+from .similarity import quality_report

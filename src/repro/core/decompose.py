@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from .quantizer import int_range
-from .squant import adaptive_round
+from .squant import adaptive_round, is_floor_ceil
 
 ROUNDINGS = ("bitshift", "rtn", "adaptive")
 
@@ -105,10 +105,52 @@ def delta_bits(bits: Sequence[int]) -> Tuple[int, ...]:
     return tuple(g + 1 for g in ladder_gaps(bits))
 
 
+def _validate_split(cur: jax.Array, hi: jax.Array, delta: jax.Array,
+                    b_hi: int, b_lo: int) -> None:
+    """The nesting exactness invariant, asserted AT the splitter.
+
+    Whatever rounding produced ``hi`` (bitshift/rtn/adaptive, including
+    any custom ``split_fn``), three facts must hold for the per-level
+    1-bit compensation to stay lossless (paper Sec. 3.3.2 / Table 7):
+
+      1. every code is in {floor(v), ceil(v)} of its target v = cur/2^gap
+         ("a type of mixed Rounding Up and Down" - each element flips AT
+         MOST ONCE from RTN, toward the other member of the pair);
+      2. the raw residual cur - hi*2^gap therefore fits the signed
+         (gap+1)-bit delta range WITHOUT clipping;
+      3. recomposition hi*2^gap + delta lands exactly back on cur.
+
+    Skipped under tracing (abstract values cannot be compared); the
+    quantization path is eager, so real splits are always checked."""
+    if isinstance(cur, jax.core.Tracer) or isinstance(hi, jax.core.Tracer):
+        return
+    gap = b_hi - b_lo
+    v = cur.astype(jnp.float32) / (2 ** gap)
+    member = is_floor_ceil(v, hi)
+    if not bool(jnp.all(member)):
+        bad = int(jnp.sum(~member))
+        raise AssertionError(
+            f"split {b_hi}->{b_lo}: {bad} code(s) left the {{floor, ceil}} "
+            "pair of their target - adaptive rounding may flip each element "
+            "at most once, or the 1-bit compensation is no longer lossless")
+    raw = cur.astype(jnp.int32) - hi.astype(jnp.int32) * (2 ** gap)
+    dlo, dhi = int_range(gap + 1)
+    if not (int(raw.min()) >= dlo and int(raw.max()) <= dhi):
+        raise AssertionError(
+            f"split {b_hi}->{b_lo}: residual range "
+            f"[{int(raw.min())}, {int(raw.max())}] exceeds the compensated "
+            f"(gap+1)={gap + 1}-bit delta range [{dlo}, {dhi}]")
+    if not bool(jnp.all(hi.astype(jnp.int32) * (2 ** gap) + delta == cur)):
+        raise AssertionError(
+            f"split {b_hi}->{b_lo}: recomposition is not bit-exact "
+            "(delta was clipped - rung upgrades would be lossy)")
+
+
 def chain_decompose(w_int: jax.Array, bits: Sequence[int],
                     method: str = "adaptive",
                     group_size: Optional[int] = None,
                     split_fn=None,
+                    validate: bool = True,
                     ) -> Tuple[jax.Array, List[jax.Array]]:
     """Recursive Eq. 6/Eq. 11 down the ladder - the ONE ladder-split loop
     (nest_quantize drives it too, via ``split_fn``).
@@ -120,7 +162,12 @@ def chain_decompose(w_int: jax.Array, bits: Sequence[int],
     ``split_fn(cur, b_hi, b_lo)`` overrides the per-level INT-b_lo
     quantization of the current codes (default: :func:`split_high` with
     ``method``, whose 'adaptive' flip group is the LAST axis; nest_quantize
-    passes a variant whose flip group is the weight's reduction axis K)."""
+    passes a variant whose flip group is the weight's reduction axis K).
+
+    ``validate`` (default ON; no-op under jit tracing) asserts the
+    exactness invariant at EVERY level: codes stay in {floor, ceil} of
+    their target and the compensated delta recomposes bit-exactly - see
+    :func:`_validate_split` (DESIGN.md Sec. 13)."""
     b = normalize_bits(bits)
     if split_fn is None:
         split_fn = lambda cur, b_hi, b_lo: split_high(
@@ -129,7 +176,10 @@ def chain_decompose(w_int: jax.Array, bits: Sequence[int],
     deltas_desc = []
     for b_hi, b_lo in zip(reversed(b[1:]), reversed(b[:-1])):
         hi = split_fn(cur, b_hi, b_lo)
-        deltas_desc.append(split_low(cur, hi, b_hi, b_lo, compensate=True))
+        delta = split_low(cur, hi, b_hi, b_lo, compensate=True)
+        if validate:
+            _validate_split(cur, hi, delta, b_hi, b_lo)
+        deltas_desc.append(delta)
         cur = hi
     return cur, deltas_desc[::-1]
 

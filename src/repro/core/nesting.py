@@ -354,10 +354,16 @@ def nest_quantize(w: jax.Array, n: int = 8, h: Optional[int] = None,
                   rounding: str = "adaptive",
                   group_size: Optional[int] = None,
                   block: Optional[int] = None,
-                  bits: Optional[Sequence[int]] = None) -> NestedTensor:
+                  bits: Optional[Sequence[int]] = None,
+                  validate: bool = True) -> NestedTensor:
     """Algorithm 1, ladder-generalized.  ``bits`` (any order, e.g.
     ``(8, 6, 4)``) selects the rung chain; when omitted the paper's
-    two-level ``(n, h)`` nesting is used (``h=None`` -> Eq. 12)."""
+    two-level ``(n, h)`` nesting is used (``h=None`` -> Eq. 12).
+
+    ``validate`` (default ON) asserts the exactness invariant at every
+    ladder split - codes in the {floor, ceil} pair of their targets and
+    bit-exact recomposition (DESIGN.md Sec. 13); it is a no-op under jit
+    tracing and costs one eager pass per level otherwise."""
     assert w.ndim >= 2, "nest_quantize expects a matmul weight (..., K, N)"
     if bits is None:
         if h is None:
@@ -387,7 +393,8 @@ def nest_quantize(w: jax.Array, n: int = 8, h: Optional[int] = None,
     cur, deltas = chain_decompose(
         w_int, bits,
         split_fn=lambda c, b_hi, b_lo: _split_level(c, b_hi, b_lo,
-                                                    rounding, group_size))
+                                                    rounding, group_size),
+        validate=validate)
 
     # step 3: block-pack the base codes and every delta stream along K -
     # the layout the Pallas packed/nested/ladder matmul kernels consume.

@@ -154,6 +154,14 @@ class QuantRecipe:
         return replace(self, overrides=tuple(overrides) + self.overrides)
 
 
+def exact_override(path: str, **settings) -> LayerOverride:
+    """A ``LayerOverride`` matching EXACTLY one pytree keystr - the path is
+    regex-escaped and anchored, so bracketed keys like ``['w']`` never act
+    as character classes.  The recipe search emits one of these per leaf
+    (DESIGN.md Sec. 13)."""
+    return LayerOverride(pattern="^" + re.escape(path) + "$", **settings)
+
+
 def quantize(params, recipe: QuantRecipe):
     """Run Algorithm 1 over a parameter pytree as described by ``recipe``.
 

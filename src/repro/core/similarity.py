@@ -64,6 +64,27 @@ def pearson(x: np.ndarray, y: np.ndarray) -> float:
     return float((xc * yc).sum() / denom) if denom else 0.0
 
 
+def quality_report(ref: np.ndarray, y: np.ndarray) -> Dict[str, float]:
+    """The two calibration-quality coordinates the recipe search and the
+    nesting-quality bench score rungs on (DESIGN.md Sec. 13):
+
+      * ``sqnr_db`` - signal-to-quantization-noise ratio of ``y`` against
+        the reference, ``10*log10(||ref||^2 / ||ref - y||^2)`` (capped at
+        300 dB for the exact-match case);
+      * ``pearson`` - Pearson correlation of the flattened outputs
+        (paper Table 5's linearity measure, applied to activations).
+    """
+    ref = np.asarray(ref, np.float64).ravel()
+    y = np.asarray(y, np.float64).ravel()
+    sig = float((ref * ref).sum())
+    noise = float(((ref - y) ** 2).sum())
+    if noise <= 0.0 or sig <= 0.0:
+        db = 300.0
+    else:
+        db = min(10.0 * math.log10(sig / noise), 300.0)
+    return {"sqnr_db": db, "pearson": pearson(ref, y)}
+
+
 def _ranks(a: np.ndarray) -> np.ndarray:
     order = np.argsort(a, kind="mergesort")
     ranks = np.empty(len(a), np.float64)

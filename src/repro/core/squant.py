@@ -93,3 +93,27 @@ def case_metric(v: jax.Array, q: jax.Array) -> jax.Array:
     """Constrained Absolute Sum of Error per row: |sum(v - q)| (diagnostic)."""
     e = v.astype(jnp.float32) - q.astype(jnp.float32)
     return jnp.abs(jnp.sum(e, axis=-1))
+
+
+def is_floor_ceil(v: jax.Array, q: jax.Array) -> jax.Array:
+    """Elementwise check of the nesting structural constraint: every code
+    must be floor(v) or ceil(v) of its real-valued target (paper
+    Sec. 3.3.2 - what bounds the split residual and keeps the (l+1)-bit
+    compensation lossless).  Returns a boolean mask."""
+    v = v.astype(jnp.float32)
+    q = q.astype(jnp.float32)
+    return (q == jnp.floor(v)) | (q == jnp.ceil(v))
+
+
+def group_signed_error(v: jax.Array, q: jax.Array,
+                       group_size: Optional[int] = None) -> jax.Array:
+    """Per-flip-group signed rounding-error sum E = sum(v - q) - the
+    quantity CASE drives to |E| <= 0.5.  Groups mirror
+    :func:`adaptive_round`: the trailing axis, optionally subdivided into
+    ``group_size`` chunks."""
+    e = v.astype(jnp.float32) - q.astype(jnp.float32)
+    e2 = e.reshape(-1, e.shape[-1]) if e.ndim > 1 else e.reshape(1, -1)
+    if group_size and e2.shape[-1] % group_size == 0 \
+            and e2.shape[-1] > group_size:
+        e2 = e2.reshape(e2.shape[0], -1, group_size)
+    return jnp.sum(e2, axis=-1)

@@ -11,6 +11,11 @@
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
       --recipe examples/recipe.json --policy hysteresis
 
+  # calibration-driven recipe search (DESIGN.md Sec. 13): score per-layer
+  # rung sensitivity, solve the byte-budgeted assignment, serve the result
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+      --bits 8,6,4 --search-recipe 12 --search-out /tmp/search.json
+
   # storage tier (DESIGN.md Sec. 10): ship ONE artifact, boot from it
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
       --bits 8,6,4 --save-artifact /tmp/nest_artifact
@@ -57,6 +62,21 @@ def main(argv=None):
     ap.add_argument("--recipe", default=None, metavar="recipe.json",
                     help="declarative QuantRecipe JSON (per-layer ladders; "
                          "overrides --bits/--n/--h)")
+    ap.add_argument("--rounding", default=None,
+                    choices=("bitshift", "rtn", "adaptive"),
+                    help="ladder-split rounding for --bits/--n/--h recipes "
+                         "(default: adaptive, the paper's SQuant CASE flip; "
+                         "ignored with --recipe, which carries its own)")
+    ap.add_argument("--search-recipe", default=None, metavar="BUDGET_MB",
+                    help="run the calibration-driven recipe search "
+                         "(DESIGN.md Sec. 13) under a full-resident byte "
+                         "budget of BUDGET_MB megabytes ('none' = "
+                         "unbudgeted), print the per-layer ladder table, "
+                         "and serve from the emitted recipe; --bits is the "
+                         "candidate chain, --seed seeds calibration")
+    ap.add_argument("--search-out", default=None, metavar="search.json",
+                    help="with --search-recipe: also write the full "
+                         "SearchResult JSON (recipe + sensitivity table)")
     ap.add_argument("--policy", default="budget",
                     choices=("budget", "hysteresis", "quality", "load",
                              "failure"),
@@ -180,16 +200,31 @@ def main(argv=None):
     else:
         model = make_model(cfg)
         params = model.init(jax.random.PRNGKey(0))
+        rkw = {"rounding": args.rounding} if args.rounding else {}
         if args.recipe:
             with open(args.recipe) as f:
                 recipe = QuantRecipe.from_json(f.read())
+        elif args.search_recipe is not None:
+            from ..api import search_recipe
+            budget = (None if args.search_recipe.lower() == "none"
+                      else int(float(args.search_recipe) * 1e6))
+            chain = (tuple(int(x) for x in args.bits.split(","))
+                     if args.bits else (8, 6, 4))
+            result = search_recipe(params, budget, bits=chain,
+                                   seed=args.seed, **rkw)
+            print("[search] " + result.table())
+            if args.search_out:
+                with open(args.search_out, "w") as f:
+                    f.write(result.to_json())
+                print(f"[search] wrote {args.search_out}")
+            recipe = result.recipe
         elif args.bits:
             recipe = QuantRecipe(
-                bits=tuple(int(x) for x in args.bits.split(",")))
+                bits=tuple(int(x) for x in args.bits.split(",")), **rkw)
         else:
-            recipe = QuantRecipe(bits=(args.h, args.n))
+            recipe = QuantRecipe(bits=(args.h, args.n), **rkw)
         nested = quantize(params, recipe)
-        if args.recipe:
+        if args.recipe or args.search_recipe is not None:
             print("[recipe] per-leaf ladders:")
             print(recipe_summary(nested))
         if args.save_artifact:

@@ -219,27 +219,32 @@ def attn_decode(x, lp, cfg, k_cache, v_cache, pos):
 # ===========================================================================
 # Transformer (dense / moe) forward
 # ===========================================================================
-def _ffn(h, lp, cfg):
+def _ffn(h, lp, cfg, dropless=False):
     if cfg.family == "moe":
         y, aux = moe_ffn(h, lp["moe"], num_experts=cfg.num_experts,
                          top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
-                         act=cfg.act)
+                         act=cfg.act, dropless=dropless)
         return y, aux
     return mlp(h, lp["mlp"], cfg.act), 0.0
 
 
-def _tf_layer_seq(h, lp, cfg):
+def _tf_layer_seq(h, lp, cfg, dropless=False):
     a, kv = attn_seq(norm(h, lp["attn_norm"], cfg.norm), lp, cfg)
     h = h + a
-    y, aux = _ffn(norm(h, lp["mlp_norm"], cfg.norm), lp, cfg)
+    y, aux = _ffn(norm(h, lp["mlp_norm"], cfg.norm), lp, cfg,
+                  dropless=dropless)
     h = h + y
     h = shard_hint(h, ("batch", None, None))
     return h, kv, aux
 
 
 def transformer_seq(params, x, cfg, want_cache: bool):
-    """x: (B,S,d) embedded input. Returns (h, cache, aux_sum)."""
-    body = _tf_layer_seq
+    """x: (B,S,d) embedded input. Returns (h, cache, aux_sum).
+
+    Cache-building runs (prefill) route MoE layers droplessly so that
+    the subsequent cached decode reproduces them exactly; training
+    (want_cache=False) keeps the capacity-dropped dispatch."""
+    body = partial(_tf_layer_seq, dropless=want_cache)
     if cfg.remat:
         body = jax.checkpoint(body, static_argnums=(2,),
                               policy=jax.checkpoint_policies.nothing_saveable)
@@ -263,7 +268,7 @@ def transformer_decode(params, x, cfg, cache, pos):
         a, (kc, vc) = attn_decode(norm(h, lp["attn_norm"], cfg.norm), lp, cfg,
                                   kc, vc, pos)
         h = h + a
-        y, _ = _ffn(norm(h, lp["mlp_norm"], cfg.norm), lp, cfg)
+        y, _ = _ffn(norm(h, lp["mlp_norm"], cfg.norm), lp, cfg, dropless=True)
         return h + y, (kc, vc)
 
     h, (kc, vc) = jax.lax.scan(scan_fn, x, (params["blocks"], cache["k"], cache["v"]))

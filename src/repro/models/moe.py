@@ -35,8 +35,15 @@ from .layers import linear, pdot, resolve_weight, silu
 
 
 def capacity(tokens: int, num_experts: int, top_k: int, factor: float,
-             multiple: int = 8) -> int:
-    c = math.ceil(tokens * top_k * factor / num_experts)
+             multiple: int = 8, dropless: bool = False) -> int:
+    """Per-expert slot count C.  ``dropless=True`` sizes C for the worst
+    case (every assignment lands on one expert), so NO token can ever be
+    dropped - the exact-routing mode inference paths use so that a cached
+    decode reproduces the full forward bit-for-bit."""
+    if dropless:
+        c = tokens * top_k
+    else:
+        c = math.ceil(tokens * top_k * factor / num_experts)
     return max(multiple, math.ceil(c / multiple) * multiple)
 
 
@@ -87,8 +94,16 @@ def _combine(y, table, gates, T: int, d: int):
 # ---------------------------------------------------------------------------
 def moe_ffn(x: jax.Array, params: Dict, *, num_experts: int, top_k: int,
             capacity_factor: float, act: str = "swiglu",
-            cap_multiple: int = 8) -> Tuple[jax.Array, jax.Array]:
-    """x: (B, S, d) -> (out, aux_loss)."""
+            cap_multiple: int = 8,
+            dropless: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss).
+
+    ``dropless=True`` (the inference-path setting) gives every expert
+    enough capacity for the worst-case assignment, so routing is exact:
+    the per-token output no longer depends on which OTHER tokens share
+    the batch, and a one-token cached decode equals the full-sequence
+    forward.  Training keeps the capacity-dropped GShard dispatch (the
+    standard efficiency trade)."""
     B, S, d = x.shape
     T = B * S
     E, K = num_experts, top_k
@@ -108,7 +123,8 @@ def moe_ffn(x: jax.Array, params: Dict, *, num_experts: int, top_k: int,
         for a in dp_axes:
             dpsz *= mesh.shape[a]
         if T % dpsz == 0:
-            C_loc = capacity(T // dpsz, E, K, capacity_factor, cap_multiple)
+            C_loc = capacity(T // dpsz, E, K, capacity_factor, cap_multiple,
+                             dropless=dropless)
             xg, table, gates, aux = _sharded_dispatch(
                 mesh, dp_axes, xf, rw, E=E, K=K, C=C_loc)
             y = _expert_compute(xg, params, act, x.dtype)
@@ -118,7 +134,7 @@ def moe_ffn(x: jax.Array, params: Dict, *, num_experts: int, top_k: int,
             return out.reshape(B, S, d), aux
         # fall through to the global path when tokens don't split evenly
 
-    C = capacity(T, E, K, capacity_factor, cap_multiple)
+    C = capacity(T, E, K, capacity_factor, cap_multiple, dropless=dropless)
     xg, table, gates, aux = _dispatch(xf, rw, E=E, K=K, C=C)
     xg = shard_hint(xg, ("experts", "expert_cap", None))
     y = _expert_compute(xg, params, act, x.dtype)

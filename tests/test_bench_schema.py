@@ -1,0 +1,36 @@
+"""benchmarks.check_schema: the BENCH_*.json shape gate CI runs."""
+from benchmarks.check_schema import check_rows
+
+
+def _row(**kw):
+    base = {"name": "r", "us_per_call": 1.0, "derived": ""}
+    base.update(kw)
+    return base
+
+
+def test_valid_rows_pass():
+    assert check_rows([_row(), _row(name="s", us_per_call=0)]) == []
+
+
+def test_requires_match_row_names():
+    rows = [_row(name="search_pareto_rung0"), _row(name="search_exactness")]
+    assert check_rows(rows, requires=[r"search_pareto_rung[0-9]+"]) == []
+    errs = check_rows(rows, requires=[r"does_not_exist"])
+    assert errs and "required row" in errs[0]
+
+
+def test_shape_violations_fail():
+    assert check_rows({"not": "a list"})
+    assert check_rows([])
+    assert check_rows(["not a dict"])
+    assert check_rows([{"name": "r", "us": 1.0, "derived": ""}])   # bad key
+    assert check_rows([_row(name="")])
+    assert check_rows([_row(us_per_call=-1.0)])
+    assert check_rows([_row(us_per_call=float("nan"))])
+    assert check_rows([_row(us_per_call=True)])
+    assert check_rows([_row(derived=3)])
+
+
+def test_failed_placeholder_rejected():
+    errs = check_rows([_row(derived="FAILED:ValueError")])
+    assert errs and "placeholder" in errs[0]

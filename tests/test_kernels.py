@@ -82,10 +82,10 @@ def test_nest_recompose_exact(nh):
 NH_SWEEP = [(8, 6), (8, 4), (6, 4)]
 
 
-def _nested_weight(n, h, K=1024, N=256, seed=0):
+def _nested_weight(n, h, K=1024, N=256, seed=0, rounding="rtn"):
     rng = np.random.default_rng(seed + 10 * n + h)
     w = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32) * 0.05)
-    return w, nest_quantize(w, n=n, h=h, rounding="rtn")
+    return w, nest_quantize(w, n=n, h=h, rounding=rounding)
 
 
 @pytest.mark.parametrize("nh", NH_SWEEP)
@@ -126,6 +126,78 @@ def test_packed_matmul_part_bit_matches_dense(nh):
                                     interpret=True)
     rel = float(jnp.linalg.norm(y_ker - dense) / jnp.linalg.norm(dense))
     assert rel <= 1e-4, rel
+
+
+# ---------------------------------------------------------------------------
+# adaptive (SQuant CASE) packed trees: the kernels read whatever codes the
+# splitter produced - parity must hold for flip-rounded streams, not just
+# the analytic RTN sweep above (DESIGN.md Sec. 13)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("nh", NH_SWEEP)
+def test_nested_matmul_dual_stream_adaptive(nh):
+    """Full-bit dual-stream kernel on an ADAPTIVELY-rounded packed tree:
+    kernel == jnp ref == dense dequant (CASE flips change the per-stream
+    codes but never the recomposed product)."""
+    n, h = nh
+    K, N, M = 1024, 256, 16
+    w, nt = _nested_weight(n, h, K, N, seed=11, rounding="adaptive")
+    rng = np.random.default_rng(12)
+    x = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
+    dense = x @ nt.full_bit(jnp.float32)
+    scale = nt.scale.reshape(1, -1)
+    y_ker = nm_kernel.nested_matmul(x, nt.w_high, nt.w_low, scale, n=n, h=h,
+                                    K=K, block_m=M, block_k=nt.block,
+                                    interpret=True)
+    y_ref = nm_ref.nested_matmul_ref(x, nt.w_high, nt.w_low, scale, n=n, h=h,
+                                     K=K, block_k=nt.block)
+    rel = float(jnp.linalg.norm(y_ker - dense) / jnp.linalg.norm(dense))
+    assert rel <= 1e-4, rel
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("nh", NH_SWEEP)
+def test_packed_matmul_part_bit_adaptive(nh):
+    """Part-bit path on the adaptively-flipped base stream: the inflated
+    scale s*2^l must reproduce x @ dense(part_bit) exactly as for RTN."""
+    n, h = nh
+    K, N, M = 1024, 256, 16
+    w, nt = _nested_weight(n, h, K, N, seed=13, rounding="adaptive")
+    rng = np.random.default_rng(14)
+    x = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
+    dense = x @ nt.part_bit(jnp.float32)
+    scale = (nt.scale * (2.0 ** nt.l)).reshape(1, -1)
+    y_ker = pm_kernel.packed_matmul(x, nt.w_high, scale, k=h, K=K,
+                                    block_m=M, block_k=nt.block,
+                                    interpret=True)
+    rel = float(jnp.linalg.norm(y_ker - dense) / jnp.linalg.norm(dense))
+    assert rel <= 1e-4, rel
+
+
+@pytest.mark.parametrize("rounding", ["rtn", "adaptive"])
+def test_ladder_matmul_adaptive_three_rung(rounding):
+    """3-rung ladder kernel vs jnp ref vs dense, on both roundings: the
+    packed delta streams of an adaptive split feed the same fused
+    accumulate as the analytic split."""
+    from repro.kernels.nested_matmul import kernel as lm_kernel
+    from repro.kernels.nested_matmul import ref as lm_ref
+    rng = np.random.default_rng(15)
+    K, N, M = 256, 128, 8
+    w = jnp.asarray(rng.normal(size=(K, N)).astype(np.float32) * 0.05)
+    nt = nest_quantize(w, bits=(8, 6, 4), rounding=rounding, block=256)
+    x = jnp.asarray(rng.normal(size=(M, K)).astype(np.float32))
+    streams = (nt.w_base,) + nt.deltas
+    scale = nt.scale.reshape(1, -1)
+    y_ref = lm_ref.ladder_matmul_ref(x, streams, scale, bits=nt.bits,
+                                     K=K, block_k=256)
+    y_ker = lm_kernel.ladder_matmul(x, streams, scale, bits=nt.bits, K=K,
+                                    block_m=8, block_n=128, block_k=256,
+                                    interpret=True)
+    np.testing.assert_allclose(np.asarray(y_ker), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    dense = x @ nt.full_bit(jnp.float32)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(dense),
+                               rtol=1e-4, atol=1e-4)
 
 
 @pytest.mark.parametrize("M", [3, 136])

@@ -1,0 +1,161 @@
+"""Recipe search tests (DESIGN.md Sec. 13).
+
+Determinism: the same calibration seed must yield byte-identical
+SearchResult JSON.  Monotonicity: growing the byte budget must never
+make any layer's ladder SHALLOWER (the upgrade walk is budget-blind; a
+budget only selects a prefix).  End-to-end: the emitted QuantRecipe must
+round-trip JSON and serve through the unchanged quantize ->
+NestQuantStore -> ServeEngine path.
+"""
+import json
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (NestQuantStore, QuantRecipe, quantize, search_recipe)
+from repro.core.search import calibration_batch, score_layer
+
+
+@pytest.fixture(scope="module")
+def params():
+    rng = np.random.default_rng(0)
+    tree = {}
+    for i, sc in enumerate((0.04, 0.5, 0.01)):
+        w = rng.normal(size=(128, 96)) * sc
+        tree[f"layer{i}"] = {"w": jnp.asarray(w.astype(np.float32))}
+    tree["norm"] = {"g": jnp.ones((128,), jnp.float32)}   # stays dense
+    return tree
+
+
+@pytest.fixture(scope="module")
+def unbudgeted(params):
+    return search_recipe(params, bits=(8, 6, 4), seed=0)
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+def test_calibration_is_seeded_and_path_keyed():
+    a = calibration_batch("['x']['w']", 32, seed=0)
+    b = calibration_batch("['x']['w']", 32, seed=0)
+    c = calibration_batch("['y']['w']", 32, seed=0)
+    d = calibration_batch("['x']['w']", 32, seed=1)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+    assert not np.array_equal(np.asarray(a), np.asarray(d))
+    assert bool(jnp.all(a >= 0))     # nonzero-mean probes (paper Sec. 3.1)
+
+
+def test_same_seed_same_recipe_json(params, unbudgeted):
+    budget = unbudgeted.spent_bytes - 1   # forces a real budget decision
+    r1 = search_recipe(params, budget, bits=(8, 6, 4), seed=0)
+    r2 = search_recipe(params, budget, bits=(8, 6, 4), seed=0)
+    assert r1.to_json() == r2.to_json()
+    assert r1.recipe.to_json() == r2.recipe.to_json()
+
+
+def test_different_seed_may_differ_but_stays_valid(params):
+    r = search_recipe(params, bits=(8, 6, 4), seed=123)
+    for _, top in r.tops:
+        assert 1 <= top <= 2
+
+
+# ---------------------------------------------------------------------------
+# budget monotonicity
+# ---------------------------------------------------------------------------
+def test_budget_monotone_never_lowers_a_rung(params, unbudgeted):
+    full = unbudgeted.spent_bytes
+    lo = full - (full - unbudgeted.fp_bytes) // 2
+    budgets = sorted({lo, full - 4096, full - 1, full, full * 2})
+    prev = None
+    for b in budgets:
+        tops = search_recipe(params, b, bits=(8, 6, 4), seed=0).tops_map
+        if prev is not None:
+            for path, top in tops.items():
+                assert top >= prev[path], \
+                    f"budget {b} lowered {path}: {prev[path]} -> {top}"
+        prev = tops
+
+
+def test_unbudgeted_takes_full_chain_everywhere(unbudgeted):
+    assert all(top == 2 for _, top in unbudgeted.tops)
+    assert {ls.path for ls in unbudgeted.layers} == \
+        {p for p, _ in unbudgeted.tops}
+
+
+def test_budget_accounting_matches_store(params, unbudgeted):
+    """spent_bytes must be the store's full-resident footprint for the
+    emitted recipe - same metadata-derived basis, no drift."""
+    res = search_recipe(params, unbudgeted.spent_bytes - 1,
+                        bits=(8, 6, 4), seed=0)
+    store = NestQuantStore(quantize(params, res.recipe))
+    assert res.spent_bytes == store.rung_resident_bytes(store.num_rungs - 1)
+
+
+def test_tiny_budget_warns_and_emits_minimum(params):
+    with pytest.warns(UserWarning, match="cannot fit"):
+        res = search_recipe(params, 10, bits=(8, 6, 4), seed=0)
+    assert all(top == 1 for _, top in res.tops)
+
+
+# ---------------------------------------------------------------------------
+# sensitivity scores
+# ---------------------------------------------------------------------------
+def test_rung_scores_improve_up_the_ladder(unbudgeted):
+    for ls in unbudgeted.layers:
+        for t in range(1, len(ls.rungs)):
+            assert ls.rungs[t].sqnr_db > ls.rungs[t - 1].sqnr_db, ls.path
+            assert ls.rungs[t].resident_bytes > \
+                ls.rungs[t - 1].resident_bytes, ls.path
+
+
+def test_score_layer_handles_stacked_leaves():
+    rng = np.random.default_rng(4)
+    w = jnp.asarray(rng.normal(size=(3, 64, 48)).astype(np.float32))
+    ls = score_layer("['blocks']['w']", w, (8, 4))
+    assert ls.shape == (3, 64, 48) and len(ls.rungs) == 2
+    assert ls.rungs[1].sqnr_db > ls.rungs[0].sqnr_db
+
+
+# ---------------------------------------------------------------------------
+# end to end: recipe JSON -> quantize -> store -> engine
+# ---------------------------------------------------------------------------
+def test_recipe_roundtrips_and_serves(params, unbudgeted):
+    res = search_recipe(params, unbudgeted.spent_bytes - 1,
+                        bits=(8, 6, 4), seed=0)
+    recipe = QuantRecipe.from_json(res.recipe.to_json())
+    nested = quantize(params, recipe)
+    store = NestQuantStore(nested)
+    # the searched ladders survive the JSON round trip per leaf
+    for path, top in res.tops:
+        spec = recipe.resolve(path, None)
+        assert spec.bits == res.layers[0].chain[:top + 1] or \
+            spec.bits == tuple(sorted(spec.bits))
+    asn = res.assignment_for(res.spent_bytes)
+    store.apply(asn)
+    assert store.resident_bytes() <= res.spent_bytes
+    payload = json.loads(res.to_json())
+    assert payload["recipe"]["bits"] == [4, 6, 8]
+    assert {l["path"] for l in payload["layers"]} == \
+        {p for p, _ in res.tops}
+
+
+def test_searched_recipe_serves_through_engine():
+    from repro.configs import get_config
+    from repro.models import make_model
+    from repro.serving import Request, ServeEngine
+
+    cfg = get_config("qwen2-1.5b").reduced()
+    model = make_model(cfg)
+    mp = model.init(jax.random.PRNGKey(0))
+    res = search_recipe(mp, bits=(8, 4), seed=0)
+    store = NestQuantStore(quantize(mp, res.recipe), dtype=jnp.float32)
+    engine = ServeEngine(cfg, store, max_batch=2, max_len=32)
+    reqs = [Request(i, np.arange(4, dtype=np.int32), max_new_tokens=2)
+            for i in range(2)]
+    budget = store.rung_resident_bytes(store.num_rungs - 1) * 2
+    done = engine.generate(reqs, memory_budget_bytes=budget)
+    assert len(done) == 2
+    assert all(len(r.out_tokens) == 2 for r in done)

@@ -1,0 +1,169 @@
+"""SQuant CASE property tests (paper Sec. 3.3, DESIGN.md Sec. 13).
+
+The invariants the nesting ladder leans on:
+
+  * MEMBERSHIP - every adaptively-rounded code is floor(v) or ceil(v) of
+    its real target (each element flips AT MOST ONCE from RTN); this is
+    what bounds the split residual to the compensated (gap+1)-bit range.
+  * CASE - after flips, each flip group's SIGNED error sum satisfies
+    |sum(v - q)| <= 0.5 (away from clip edges, where flips are forbidden
+    by the range constraint instead).
+  * RANGE - codes never leave the INT-n clip range, flips included.
+  * EXACTNESS - adaptively-split ladders recompose bit-exactly at every
+    rung (all <=4-rung chains x all INT-8/6 codes, mirroring
+    tests/test_ladder.py's exhaustive sweep for the analytic methods).
+"""
+import itertools
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import (adaptive_round, chain_decompose, chain_recompose,
+                        group_signed_error, int_range, is_floor_ceil,
+                        normalize_bits)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:          # property tests need requirements-dev.txt
+    HAS_HYPOTHESIS = False
+
+
+def _all_chains(n, max_len=4):
+    lowers = range(2, n)
+    for r in range(1, max_len):
+        for combo in itertools.combinations(lowers, r):
+            yield (n,) + tuple(sorted(combo, reverse=True))
+
+
+# ---------------------------------------------------------------------------
+# deterministic coverage (runs without hypothesis)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_bits", [8, 6, 4])
+@pytest.mark.parametrize("group_size", [None, 16])
+def test_codes_stay_in_floor_ceil_pair(n_bits, group_size):
+    rng = np.random.default_rng(0)
+    v = jnp.asarray((rng.normal(size=(8, 64)) * 12).astype(np.float32))
+    q = adaptive_round(v, n_bits, group_size=group_size)
+    lo, hi = int_range(n_bits)
+    vc = jnp.clip(v, lo, hi)       # targets outside the range land on clip
+    assert bool(jnp.all(is_floor_ceil(vc, q)))
+
+
+@pytest.mark.parametrize("n_bits", [8, 6])
+def test_group_signed_error_at_most_half(n_bits):
+    """CASE: interior targets (no clip interference) -> |E| <= 0.5."""
+    lo, hi = int_range(n_bits)
+    rng = np.random.default_rng(1)
+    v = jnp.asarray(rng.uniform(lo + 1, hi - 1,
+                                size=(16, 48)).astype(np.float32))
+    q = adaptive_round(v, n_bits)
+    E = group_signed_error(v, q)
+    assert float(jnp.max(jnp.abs(E))) <= 0.5 + 1e-4
+
+
+def test_group_signed_error_grouped_matches_rounding_groups():
+    lo, hi = int_range(8)
+    rng = np.random.default_rng(2)
+    v = jnp.asarray(rng.uniform(lo + 1, hi - 1,
+                                size=(4, 64)).astype(np.float32))
+    q = adaptive_round(v, 8, group_size=16)
+    E = group_signed_error(v, q, group_size=16)
+    assert E.shape == (4, 4)
+    assert float(jnp.max(jnp.abs(E))) <= 0.5 + 1e-4
+
+
+@pytest.mark.parametrize("n_bits", [8, 5, 3])
+def test_codes_never_leave_clip_range(n_bits):
+    """Flips near the clip edge are suppressed, not range-violating."""
+    lo, hi = int_range(n_bits)
+    rng = np.random.default_rng(3)
+    v = jnp.asarray((rng.normal(size=(6, 32)) * hi * 3).astype(np.float32))
+    q = adaptive_round(v, n_bits)
+    assert int(q.min()) >= lo and int(q.max()) <= hi
+
+
+@pytest.mark.parametrize("n", [8, 6])
+def test_adaptive_chain_exact_at_every_rung(n):
+    """All signed INT-n codes through all <=4-rung chains, adaptively
+    split: the compensated deltas must recompose bit-exactly at EVERY
+    rung (chain_decompose's validate pass re-asserts it per level)."""
+    lo, hi = int_range(n)
+    codes = jnp.arange(lo, hi + 1, dtype=jnp.int32).reshape(1, -1).T
+    for chain in _all_chains(n):
+        bits = normalize_bits(chain)
+        base, deltas = chain_decompose(codes, bits, method="adaptive")
+        np.testing.assert_array_equal(
+            np.asarray(chain_recompose(base, deltas, bits)),
+            np.asarray(codes), err_msg=f"chain {bits}")
+        for r in range(len(bits)):
+            cur = chain_recompose(base, deltas, bits, rung=r)
+            rlo, rhi = int_range(bits[r])
+            assert int(cur.min()) >= rlo and int(cur.max()) <= rhi, (bits, r)
+
+
+def test_splitter_rejects_non_floor_ceil_split():
+    """The tentpole's in-splitter assertion: a split_fn whose codes leave
+    the {floor, ceil} pair must be caught AT the splitter."""
+    codes = jnp.arange(-128, 128, dtype=jnp.int32).reshape(1, -1).T
+
+    def bad_split(cur, b_hi, b_lo):
+        # off-by-two: rounds, then shifts every code up one more step
+        good = jnp.round(cur.astype(jnp.float32) / 2 ** (b_hi - b_lo))
+        lo, hi = int_range(b_lo)
+        return jnp.clip(good + 2, lo, hi).astype(jnp.int32)
+
+    with pytest.raises(AssertionError, match="floor, ceil"):
+        chain_decompose(codes, (8, 4), split_fn=bad_split)
+
+
+# ---------------------------------------------------------------------------
+# randomized property sweep (requirements-dev.txt)
+# ---------------------------------------------------------------------------
+if HAS_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(data=st.data())
+    def test_case_invariants_random(data):
+        n_bits = data.draw(st.sampled_from([8, 6, 5, 4]), label="n_bits")
+        lo, hi = int_range(n_bits)
+        rows = data.draw(st.integers(1, 4), label="rows")
+        cols = data.draw(st.sampled_from([8, 16, 32]), label="cols")
+        vals = data.draw(
+            st.lists(st.lists(
+                st.floats(lo + 1.0, hi - 1.0, allow_nan=False,
+                          allow_infinity=False, width=32),
+                min_size=cols, max_size=cols),
+                min_size=rows, max_size=rows), label="v")
+        v = jnp.asarray(np.array(vals, np.float32))
+        q = adaptive_round(v, n_bits)
+        assert bool(jnp.all(is_floor_ceil(v, q)))
+        assert int(q.min()) >= lo and int(q.max()) <= hi
+        assert float(jnp.max(jnp.abs(group_signed_error(v, q)))) <= 0.5 + 1e-3
+
+    @settings(max_examples=40, deadline=None)
+    @given(data=st.data())
+    def test_adaptive_random_chain_exact(data):
+        n = data.draw(st.sampled_from([8, 6]), label="n")
+        lowers = data.draw(st.sets(st.integers(2, n - 1),
+                                   min_size=1, max_size=3), label="lowers")
+        bits = tuple(sorted(lowers)) + (n,)
+        lo, hi = int_range(n)
+        w = data.draw(
+            st.lists(st.lists(st.integers(lo, hi), min_size=4, max_size=4),
+                     min_size=1, max_size=5), label="w")
+        codes = jnp.asarray(np.array(w, np.int32))
+        base, deltas = chain_decompose(codes, bits, method="adaptive")
+        np.testing.assert_array_equal(
+            np.asarray(chain_recompose(base, deltas, bits)),
+            np.asarray(codes))
+else:
+    @pytest.mark.skip(reason="property tests need hypothesis "
+                      "(pip install -r requirements-dev.txt)")
+    def test_case_invariants_random():
+        pass
+
+    @pytest.mark.skip(reason="property tests need hypothesis "
+                      "(pip install -r requirements-dev.txt)")
+    def test_adaptive_random_chain_exact():
+        pass
