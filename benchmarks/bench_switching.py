@@ -142,7 +142,7 @@ def run():
     # deltas, and the ledger total must equal the per-leaf sum exactly.
     from repro.api import (BudgetPolicy, HysteresisPolicy, LayerOverride,
                            QualityFloorPolicy, QuantRecipe, RungAssignment,
-                           quantize, simulate_policy)
+                           SignalTracker, quantize)
     import re
     cfg = ARCHS["qwen2-1.5b"].reduced()
     params = make_model(cfg).init(rng)
@@ -180,7 +180,17 @@ def run():
                          ("hysteresis", HysteresisPolicy(dwell=4)),
                          ("quality_floor", QualityFloorPolicy(floor=20.0))):
         st = NestQuantStore(nested, mode="full")
-        results[name] = r = simulate_policy(policy, st, osc)
+        tracker = SignalTracker()     # explicit decide/apply budget loop
+        r = {"switches": 0, "modes": []}
+        for budget in osc:
+            rep = st.apply(policy.decide(
+                st, tracker.signal(memory_budget_bytes=budget)))
+            r["switches"] += int(rep["moves"] > 0)
+            tracker.note(rep["moves"] > 0)
+            r["modes"].append(st.mode)
+        r["page_in"] = st.ledger.page_in_bytes
+        r["page_out"] = st.ledger.page_out_bytes
+        results[name] = r
         emit(f"policy_oscillation_{name}", 0.0,
              f"switches={r['switches']};"
              f"page_in_MB={r['page_in']/1e6:.3f};"

@@ -11,8 +11,10 @@ This checker enforces the row contract ``benchmarks.common.emit`` writes:
   * row names are unique-or-repeatable but never empty;
   * no row is a ``FAILED:`` placeholder (a suite crash must fail CI via
     run.py's exit code, not linger as data);
-  * every ``--require REGEX`` matches at least one row name (the per-bench
-    canary rows CI pins, e.g. the Pareto assertions of the nesting bench).
+  * every ``--require REGEX`` matches at least one row name, and so does
+    every pattern in :data:`REQUIRED_ROWS` for the file's basename (the
+    per-bench canary rows CI pins - the Pareto assertions of the nesting
+    bench, the scaling + baseline + controller rows of the fleet bench).
 
   PYTHONPATH=src python -m benchmarks.check_schema BENCH_x.json \
       --require 'search_pareto_rung[0-9]+' --require search_exactness
@@ -22,10 +24,36 @@ from __future__ import annotations
 import argparse
 import json
 import math
+import os
 import re
 import sys
 
 ROW_KEYS = {"name", "us_per_call", "derived"}
+
+# Per-bench canary rows, keyed by the BENCH file's basename: the rows CI
+# must always find in that artifact (applied automatically in main(), on
+# top of any explicit --require).  A suite that silently stops emitting
+# its headline rows fails here instead of rotting the uploaded
+# trajectory.
+REQUIRED_ROWS = {
+    "BENCH_nesting_quality.json": (
+        r"search_pareto_rung[0-9]+",
+        r"search_exactness",
+        r"table6_layer_relerr_h[0-9]+",
+        r"table6_top1_agree_h[0-9]+",
+    ),
+    "BENCH_fleet.json": (
+        r"fleet_scaling_N1\b",
+        r"fleet_scaling_N4\b",
+        r"fleet_scaling_N16\b",
+        r"fleet_scaling_N64\b",
+        r"fleet_baseline_unicast",
+        r"fleet_baseline_zoo",
+        r"fleet_controller_equal",
+        r"fleet_controller_rebalance",
+        r"fleet_controller_p95_cut",
+    ),
+}
 
 
 def check_rows(rows, requires=()) -> list:
@@ -80,7 +108,9 @@ def main(argv=None) -> int:
             print(f"{path}: unreadable ({e})", file=sys.stderr)
             failed = True
             continue
-        errors = check_rows(rows, args.require)
+        requires = (tuple(args.require)
+                    + REQUIRED_ROWS.get(os.path.basename(path), ()))
+        errors = check_rows(rows, requires)
         if errors:
             failed = True
             for e in errors:

@@ -22,7 +22,7 @@ def main() -> None:
                     help="also write the emitted rows as JSON")
     args = ap.parse_args()
 
-    from . import (bench_chaos, bench_cliff, bench_kernels,
+    from . import (bench_chaos, bench_cliff, bench_fleet, bench_kernels,
                    bench_nesting_quality, bench_numerical_errors,
                    bench_serving, bench_similarity, bench_storage,
                    bench_switching, bench_transport, roofline)
@@ -36,6 +36,7 @@ def main() -> None:
         ("transport", bench_transport.run),
         ("serving", bench_serving.run),
         ("chaos", bench_chaos.run),
+        ("fleet", bench_fleet.run),
         ("kernels", bench_kernels.run),
         ("roofline", roofline.run),
     ]

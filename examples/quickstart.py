@@ -1,5 +1,6 @@
-"""Quickstart: NestQuant a model in nine steps - quantize, inspect,
-serve, switch, ladder, recipe, deploy, and schedule under load.
+"""Quickstart: NestQuant a model in ten steps - quantize, inspect,
+serve, switch, ladder, recipe, deploy, schedule under load, and scale
+out to a fleet.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -66,7 +67,7 @@ def main():
     # ladders from one spec - attention gets 8>6>4, the MLP keeps 8>4 -
     # and a dwell-window policy that kills switch thrash
     from repro.api import (BudgetPolicy, HysteresisPolicy, LayerOverride,
-                           simulate_policy)
+                           SignalTracker)
     recipe = QuantRecipe(bits=(8, 4), overrides=(
         LayerOverride(pattern=r"\['(q|k|v|o)'\]", bits=(8, 6, 4)),))
     mixed = quantize(params, recipe)
@@ -76,10 +77,16 @@ def main():
     for name, pol in (("budget", BudgetPolicy()),
                       ("hysteresis", HysteresisPolicy(dwell=4))):
         st = NestQuantStore(mixed, mode="full")
-        r = simulate_policy(pol, st, osc)
-        print(f"recipe + {name:10s}: {r['switches']} switches, "
-              f"{(r['page_in'] + r['page_out'])/1e6:.2f}MB paged on an "
-              f"oscillating budget")
+        tracker = SignalTracker()     # decide/apply loop, one step per budget
+        switches = 0
+        for budget in osc:
+            rep = st.apply(pol.decide(
+                st, tracker.signal(memory_budget_bytes=budget)))
+            switches += int(rep["moves"] > 0)
+            tracker.note(rep["moves"] > 0)
+        paged = st.ledger.page_in_bytes + st.ledger.page_out_bytes
+        print(f"recipe + {name:10s}: {switches} switches, "
+              f"{paged/1e6:.2f}MB paged on an oscillating budget")
 
     # 8. deployment (DESIGN.md Sec. 10): save ONE artifact, cold-boot a
     # store from manifest + base segment only, and page rungs in from
@@ -131,6 +138,27 @@ def main():
               f"out {rec['page_out']/1e3:.0f}KB (== bytes(delta_k))")
         assert rec["page_in"] == rec["expected_in"]
         assert rec["page_out"] == rec["expected_out"]
+
+    # 10. a fleet (DESIGN.md Sec. 14): N replicas over the SAME artifact,
+    # paging deltas through a CDN-style distribution tier - the WAN ships
+    # each segment once (edge cache), concurrent pulls multicast, and the
+    # fleet moves strictly fewer bytes than N unicast deployments.  Every
+    # replica's ledger stays exact, chaos or not.
+    from repro.api import ReplicaSpec, build_fleet
+    specs = [ReplicaSpec(name="edge-fast", link_mbps=400, trace="burst",
+                         n_requests=6, seed=0, policy="load", max_batch=4,
+                         new_tokens=2),
+             ReplicaSpec(name="edge-slow", link_mbps=25, trace="poisson",
+                         n_requests=6, seed=1, policy="load", max_batch=4,
+                         new_tokens=2)]
+    fleet_report = build_fleet(specs, cfg=cfg, nested_params=ladder).run()
+    checked = fleet_report.verify_ledgers()
+    print("fleet: " + fleet_report.table())
+    assert fleet_report.fleet_bytes < fleet_report.unicast_bytes
+    print(f"  distribution tier saved "
+          f"{1 - fleet_report.fleet_bytes/fleet_report.unicast_bytes:.0%} "
+          f"of wire bytes vs per-replica unicast; {checked} switch "
+          f"ledgers exact")
 
 
 if __name__ == "__main__":

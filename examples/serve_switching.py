@@ -70,7 +70,7 @@ def main():
     # policy thrash (page the same delta in and out every batch); the
     # hysteresis wrapper downgrades once, holds through the blips, and
     # upgrades once after the dwell window (DESIGN.md Sec. 9).
-    from repro.api import BudgetPolicy, HysteresisPolicy, simulate_policy
+    from repro.api import BudgetPolicy, HysteresisPolicy, SignalTracker
     osc = [need[-1] * 2, need[0], need[-1] * 2, need[0],
            need[-1] * 2, need[0], need[-1] * 2, need[-1] * 2,
            need[-1] * 2, need[-1] * 2, need[-1] * 2]
@@ -79,10 +79,17 @@ def main():
     for name, policy in (("budget", BudgetPolicy()),
                          ("hysteresis", HysteresisPolicy(dwell=4))):
         st = NestQuantStore(nested, mode="full", dtype=jnp.float32)
-        r = simulate_policy(policy, st, osc)
-        paged = (r["page_in"] + r["page_out"]) / 1e6
-        print(f"  {name:10s}: {r['switches']} switches, "
-              f"{paged:.2f}MB paged, modes {r['modes']}")
+        tracker = SignalTracker()
+        switches, modes = 0, []
+        for budget in osc:
+            rep = st.apply(policy.decide(
+                st, tracker.signal(memory_budget_bytes=budget)))
+            switches += int(rep["moves"] > 0)
+            tracker.note(rep["moves"] > 0)
+            modes.append(st.mode)
+        paged = (st.ledger.page_in_bytes + st.ledger.page_out_bytes) / 1e6
+        print(f"  {name:10s}: {switches} switches, "
+              f"{paged:.2f}MB paged, modes {modes}")
 
     # -- serving under load (DESIGN.md Sec. 11) ----------------------------
     # The budget scenarios above hand-synthesize every signal; here real

@@ -23,7 +23,10 @@ _API = (
     "ServiceModel", "calibrate_qps",
     "save_artifact", "open_artifact", "load_store", "Artifact",
     "ArtifactError", "DeltaPager", "InMemoryPager", "FilePager",
-    "ThrottledPager",
+    "ThrottledPager", "LinkBudget",
+    "ReplicaSpec", "ChaosProfile", "Replica", "build_replica",
+    "DeltaDistribution", "EdgeClientPager", "FleetController",
+    "BudgetEnvelope", "Fleet", "FleetReport", "build_fleet",
     "ARCHS", "get_config", "make_model",
 )
 __all__ = list(_API)

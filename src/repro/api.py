@@ -38,8 +38,11 @@ from .serving.policies import (POLICIES, BudgetPolicy, DeliveryHealth,
                                StaticRungPolicy, make_policy, simulate_policy)
 from .serving.scheduler import (LoadGenerator, ScheduledRequest, Scheduler,
                                 SchedulerReport, ServiceModel, calibrate_qps)
+from .fleet import (BudgetEnvelope, ChaosProfile, DeltaDistribution,
+                    EdgeClientPager, Fleet, FleetController, FleetReport,
+                    Replica, ReplicaSpec, build_fleet, build_replica)
 from .storage import (Artifact, ArtifactError, ChaosPager, CorruptStreamError,
-                      DeltaPager, FilePager, InMemoryPager, Outage,
+                      DeltaPager, FilePager, InMemoryPager, LinkBudget, Outage,
                       PagerError, ResilientPager, RetryPolicy, StreamHealth,
                       ThrottledPager, TransientPagerError, VirtualClock,
                       WallClock, load_store, open_artifact, save_artifact)
@@ -69,11 +72,15 @@ __all__ = [
     # storage tier (artifacts + pagers, DESIGN.md Sec. 10)
     "save_artifact", "open_artifact", "load_store", "Artifact",
     "ArtifactError", "DeltaPager", "InMemoryPager", "FilePager",
-    "ThrottledPager",
+    "ThrottledPager", "LinkBudget",
     # fault tolerance (DESIGN.md Sec. 12)
     "PagerError", "TransientPagerError", "CorruptStreamError",
     "ChaosPager", "Outage", "ResilientPager", "RetryPolicy", "StreamHealth",
     "VirtualClock", "WallClock",
+    # fleet orchestration (DESIGN.md Sec. 14)
+    "ReplicaSpec", "ChaosProfile", "Replica", "build_replica",
+    "DeltaDistribution", "EdgeClientPager", "FleetController",
+    "BudgetEnvelope", "Fleet", "FleetReport", "build_fleet",
     # models/configs
     "ARCHS", "get_config", "make_model",
 ]

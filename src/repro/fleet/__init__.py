@@ -1,0 +1,22 @@
+"""Fleet layer: multi-replica orchestration with CDN-style delta
+distribution (DESIGN.md Sec. 14).
+
+One shared NestQuant artifact, N simulated device replicas: each gets
+its own store / pager chain / engine / scheduler on a shared virtual
+clock, delta segments flow through a deduplicating + multicasting
+origin->edge distribution tier, and a fleet controller rebalances
+per-replica budget envelopes over the local rung policies.
+"""
+from .controller import (CONTROLLER_MODES, BudgetEnvelope, Fleet,
+                         FleetController, FleetReport, build_fleet)
+from .distribution import DeltaDistribution, EdgeClientPager
+from .replica import (ChaosProfile, Replica, ReplicaSpec, build_policy,
+                      build_replica)
+
+__all__ = [
+    "ChaosProfile", "Replica", "ReplicaSpec", "build_policy",
+    "build_replica",
+    "DeltaDistribution", "EdgeClientPager",
+    "BudgetEnvelope", "FleetController", "Fleet", "FleetReport",
+    "build_fleet", "CONTROLLER_MODES",
+]

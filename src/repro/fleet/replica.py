@@ -1,0 +1,175 @@
+"""Replica specs and wiring: one simulated device per spec
+(DESIGN.md Sec. 14).
+
+A :class:`ReplicaSpec` is everything that makes one fleet member
+different from the next: its budget envelope, last-mile link speed, the
+traffic trace it serves, its policy stack, and (optionally) a
+:class:`ChaosProfile` describing how unreliable its delta link is.
+:func:`build_replica` turns a spec into a live :class:`Replica` - its
+own :class:`~repro.core.switching.NestQuantStore` over the SHARED nested
+tree, its own pager chain bottoming out at the fleet's
+:class:`~repro.fleet.distribution.DeltaDistribution`, its own
+:class:`~repro.serving.engine.ServeEngine` (sharing one jitted
+prefill/decode pair across the fleet, so N replicas trace jax once, not
+N times), and its own :class:`~repro.serving.scheduler.Scheduler` on the
+shared :class:`~repro.storage.pager.VirtualClock`.
+
+The pager chain per replica is::
+
+    EdgeClientPager -> [ChaosPager ->] [ResilientPager ->] store
+
+i.e. chaos and retry are PER DEVICE (a flaky last-mile link is one
+replica's problem), while dedup/multicast accounting is fleet-global.
+The last-mile link speed is modeled where the scheduler already charges
+byte movement: the replica's :class:`~repro.serving.scheduler.
+ServiceModel` gets ``page_gbps`` from ``link_mbps``, so a slow device
+really does pay more virtual time per paged delta byte.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Tuple
+
+from ..core.switching import NestQuantStore
+from ..serving.engine import ServeEngine
+from ..serving.policies import (FailureAwarePolicy, HysteresisPolicy,
+                                make_policy)
+from ..serving.scheduler import LoadGenerator, Scheduler, ServiceModel
+from ..storage.pager import ChaosPager, ResilientPager, RetryPolicy
+from .distribution import DeltaDistribution
+
+
+@dataclass(frozen=True)
+class ChaosProfile:
+    """Per-replica fault injection on the delta link (DESIGN.md
+    Sec. 12 stack, fleet-scoped).  ``seed`` is mixed with the replica
+    index so a storm on a subset of replicas stays deterministic."""
+    seed: int = 0
+    p_transient: float = 0.2
+    p_corrupt: float = 0.05
+    p_stall: float = 0.05
+    stall_s: float = 2e-4
+    retry_attempts: int = 4
+    backoff_base_s: float = 1e-4
+    quarantine_s: float = 2e-3
+
+
+@dataclass(frozen=True)
+class ReplicaSpec:
+    """One fleet member: who it is, what it serves, what it runs on.
+
+    ``budget_bytes`` is the replica's INITIAL memory envelope (None =
+    unconstrained); a :class:`~repro.fleet.controller.FleetController`
+    rewrites it at every rebalance tick.  ``link_mbps`` is the last-mile
+    delta-paging link.  ``qps=None`` lets the builder calibrate the rate
+    to the replica's own service capacity."""
+    name: str
+    budget_bytes: Optional[int] = None
+    link_mbps: float = 100.0
+    trace: str = "poisson"
+    qps: Optional[float] = None
+    n_requests: int = 16
+    seed: int = 0
+    policy: str = "load"
+    max_batch: int = 4
+    new_tokens: int = 2
+    chaos: Optional[ChaosProfile] = None
+
+    def __post_init__(self):
+        if self.link_mbps <= 0:
+            raise ValueError(f"link_mbps must be > 0, got {self.link_mbps}")
+        if self.n_requests <= 0:
+            raise ValueError(f"n_requests must be > 0, "
+                             f"got {self.n_requests}")
+
+
+@dataclass
+class Replica:
+    """A live fleet member: spec + the stack build_replica wired."""
+    spec: ReplicaSpec
+    store: NestQuantStore
+    engine: ServeEngine
+    scheduler: Scheduler
+    service: ServiceModel
+    chaos: Optional[ChaosPager] = None
+    resilient: Optional[ResilientPager] = None
+    envelope_log: list = field(default_factory=list)
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    def set_envelope(self, budget_bytes: Optional[int], now: float) -> None:
+        """Point the local policy at a new memory envelope (the
+        controller->local contract: the NEXT decision sees it)."""
+        self.scheduler.memory_budget_bytes = budget_bytes
+        self.envelope_log.append((now, budget_bytes))
+
+
+def build_policy(name: str, *, max_batch: int = 4, dwell: int = 2,
+                 quality_floor: float = 20.0):
+    """The launch/serve policy composition, importable (one definition
+    for the CLI, the fleet builder, and the benchmarks).
+
+    'load' wraps LoadAdaptivePolicy in hysteresis (damp thrash around
+    capacity edges); 'failure' wraps that stack in FailureAwarePolicy."""
+    if name == "failure":
+        inner = HysteresisPolicy(make_policy("load", high_depth=max_batch),
+                                 dwell=dwell)
+        return FailureAwarePolicy(inner)
+    kw = ({"dwell": dwell} if name == "hysteresis" else
+          {"floor": quality_floor} if name == "quality" else
+          {"high_depth": max_batch} if name == "load" else {})
+    pol = make_policy(name, **kw)
+    if name == "load":
+        pol = HysteresisPolicy(pol, dwell=dwell)
+    return pol
+
+
+def build_replica(spec: ReplicaSpec, *, cfg, nested_params,
+                  distribution: DeltaDistribution, clock,
+                  vocab_size: int, model=None, compiled=None,
+                  service: Optional[ServiceModel] = None,
+                  dtype=None) -> Replica:
+    """Wire one replica onto the shared artifact + distribution tier.
+
+    ``nested_params`` is the fleet's one shared nested tree: each store
+    flattens it into its own leaf list (stores never mutate each other's
+    residency).  ``model``/``compiled`` share one jitted prefill/decode
+    pair fleet-wide."""
+    import jax.numpy as jnp
+    dtype = dtype if dtype is not None else jnp.float32
+    pager = distribution.client(spec.name)
+    chaos = resilient = None
+    if spec.chaos is not None:
+        c = spec.chaos
+        chaos = ChaosPager(pager, seed=c.seed,
+                           p_transient=c.p_transient, p_corrupt=c.p_corrupt,
+                           p_stall=c.p_stall, stall_s=c.stall_s, clock=clock)
+        resilient = ResilientPager(
+            chaos, RetryPolicy(max_attempts=c.retry_attempts,
+                               backoff_base_s=c.backoff_base_s,
+                               quarantine_s=c.quarantine_s),
+            seed=c.seed + 1, clock=clock)
+        pager = resilient
+    store = NestQuantStore(nested_params, mode="part", dtype=dtype,
+                           pager=pager)
+    engine = ServeEngine(cfg, store, max_batch=spec.max_batch, max_len=64,
+                         policy=build_policy(spec.policy,
+                                             max_batch=spec.max_batch),
+                         model=model, compiled=compiled)
+    # the last-mile link is charged where byte movement already costs
+    # virtual time: page_gbps = spec.link_mbps (1 Mbit/s = 125e3 B/s)
+    base = service if service is not None else ServiceModel()
+    svc = replace(base, page_gbps=spec.link_mbps * 125e3 / 1e9)
+    from ..serving.scheduler import calibrate_qps
+    qps = spec.qps if spec.qps is not None else calibrate_qps(
+        store, svc, steps=spec.new_tokens, max_batch=spec.max_batch,
+        utilization=0.4)
+    trace = LoadGenerator(spec.trace, qps=qps, n_requests=spec.n_requests,
+                          vocab_size=vocab_size, seed=spec.seed,
+                          new_tokens=spec.new_tokens)
+    sched = Scheduler(engine, trace, svc, max_batch=spec.max_batch,
+                      memory_budget_bytes=spec.budget_bytes, clock=clock)
+    return Replica(spec=spec, store=store, engine=engine, scheduler=sched,
+                   service=svc, chaos=chaos, resilient=resilient)

@@ -43,16 +43,19 @@ import numpy as np
 
 import jax
 
-from ..api import (QuantRecipe, Request, ServeEngine, make_policy, quantize,
+from ..api import (QuantRecipe, Request, ServeEngine, quantize,
                    recipe_summary)
 from ..configs import get_config
 from ..core import NestQuantStore
 from ..core.nesting import mode_to_rung
 from ..models import make_model
+from .flags import traffic_parent
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
+    # traffic/policy/chaos flags come from the shared parent (launch.flags)
+    # so serve and fleet cannot drift apart
+    ap = argparse.ArgumentParser(parents=[traffic_parent()])
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--n", type=int, default=8)
@@ -77,36 +80,8 @@ def main(argv=None):
     ap.add_argument("--search-out", default=None, metavar="search.json",
                     help="with --search-recipe: also write the full "
                          "SearchResult JSON (recipe + sensitivity table)")
-    ap.add_argument("--policy", default="budget",
-                    choices=("budget", "hysteresis", "quality", "load",
-                             "failure"),
-                    help="rung policy driving the engine (default: budget; "
-                         "'load' = backlog-driven LoadAdaptivePolicy wrapped "
-                         "in hysteresis - the natural pick with --trace; "
-                         "'failure' = the load stack wrapped in "
-                         "FailureAwarePolicy, which holds upgrades below the "
-                         "deliverable ceiling after delivery faults)")
-    ap.add_argument("--dwell", type=int, default=4,
-                    help="hysteresis dwell window (decisions)")
-    ap.add_argument("--quality-floor", type=float, default=20.0,
-                    help="quality policy: min SQNR dB vs the full-bit model")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--budget-schedule", default="full,part,full",
                     help="comma list of full|part|rungK phases")
-    ap.add_argument("--trace", default=None,
-                    choices=("poisson", "burst", "diurnal"),
-                    help="drive the engine from an open-loop arrival trace "
-                         "through the continuous-batching Scheduler "
-                         "(DESIGN.md Sec. 11) instead of --budget-schedule; "
-                         "--requests becomes the trace length")
-    ap.add_argument("--qps", type=float, default=None,
-                    help="with --trace: steady arrival rate (default: 40%% "
-                         "of the top rung's virtual service capacity)")
-    ap.add_argument("--max-batch", type=int, default=8,
-                    help="with --trace: admission batch size (default 8)")
-    ap.add_argument("--seed", type=int, default=0,
-                    help="with --trace: arrival trace seed")
     ap.add_argument("--save-artifact", default=None, metavar="DIR",
                     help="quantize per --recipe/--bits, write a NestQuant "
                          "artifact (DESIGN.md Sec. 10), and exit")
@@ -116,21 +91,6 @@ def main(argv=None):
     ap.add_argument("--link-mbps", type=float, default=None,
                     help="with --artifact: simulate paging over an N Mbit/s "
                          "link (ThrottledPager) and report transfer seconds")
-    ap.add_argument("--chaos", action="store_true",
-                    help="inject seeded faults on the delta-paging link "
-                         "(ChaosPager) and fetch through retry + CRC "
-                         "re-verification (ResilientPager); DESIGN.md Sec. 12")
-    ap.add_argument("--chaos-seed", type=int, default=0,
-                    help="fault-injection seed (default 0)")
-    ap.add_argument("--chaos-transient", type=float, default=0.2,
-                    help="per-fetch transient failure probability")
-    ap.add_argument("--chaos-corrupt", type=float, default=0.05,
-                    help="per-fetch CRC-corrupting bit-flip probability")
-    ap.add_argument("--chaos-stall", type=float, default=0.05,
-                    help="per-fetch stall probability (stalls burn virtual "
-                         "time on the scheduler clock)")
-    ap.add_argument("--retry-attempts", type=int, default=4,
-                    help="with --chaos: ResilientPager attempts per fetch")
     args = ap.parse_args(argv)
     if args.policy in ("load", "failure") and not args.trace:
         # the budget-schedule path reports the batch size as queue_depth,
@@ -141,22 +101,13 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.reduced()
-    pkw = ({"dwell": args.dwell} if args.policy == "hysteresis" else
-           {"floor": args.quality_floor} if args.policy == "quality" else
-           {"high_depth": args.max_batch} if args.policy == "load" else {})
     batch_cap = args.max_batch if args.trace else args.requests
 
     def build_policy():
-        from ..api import FailureAwarePolicy, HysteresisPolicy
-        if args.policy == "failure":
-            inner = HysteresisPolicy(
-                make_policy("load", high_depth=args.max_batch),
-                dwell=args.dwell)
-            return FailureAwarePolicy(inner)
-        pol = make_policy(args.policy, **pkw)
-        if args.policy == "load":      # damp thrash around capacity edges
-            pol = HysteresisPolicy(pol, dwell=args.dwell)
-        return pol
+        # one policy composition for serve AND fleet (repro.fleet.replica)
+        from ..fleet.replica import build_policy as build
+        return build(args.policy, max_batch=args.max_batch,
+                     dwell=args.dwell, quality_floor=args.quality_floor)
 
     clock = None
     chaos_state = {}

@@ -77,9 +77,10 @@ class EngineStats:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, store: NestQuantStore,
                  max_batch: int = 8, max_len: int = 128,
-                 policy: Optional[RungPolicy] = None):
+                 policy: Optional[RungPolicy] = None, *,
+                 model: Optional[Model] = None, compiled=None):
         self.cfg = cfg
-        self.model = make_model(cfg)
+        self.model = model if model is not None else make_model(cfg)
         self.store = store
         self.max_batch = max_batch
         self.max_len = max_len
@@ -88,8 +89,20 @@ class ServeEngine:
         self.artifact = None          # set by from_artifact
         self._tracker = SignalTracker()
         self._params = None
-        self._prefill = jax.jit(self.model.prefill)
-        self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,))
+        if compiled is not None:
+            self._prefill, self._decode = compiled
+        else:
+            self._prefill = jax.jit(self.model.prefill)
+            self._decode = jax.jit(self.model.decode_step,
+                                   donate_argnums=(2,))
+
+    @property
+    def compiled(self):
+        """The jitted ``(prefill, decode_step)`` pair.  A fleet of N
+        same-config replicas passes one engine's ``compiled`` (plus its
+        ``model``) to the other N-1 constructors so jax traces each
+        function once, not N times (DESIGN.md Sec. 14)."""
+        return (self._prefill, self._decode)
 
     # -- deployment --------------------------------------------------------
     @classmethod

@@ -31,6 +31,7 @@ page traffic.
 """
 from __future__ import annotations
 
+import warnings
 import weakref
 from collections import deque
 from dataclasses import dataclass
@@ -385,11 +386,18 @@ def simulate_policy(policy: RungPolicy, store: NestQuantStore,
         ever populated).  For anything traffic-shaped - queue depth,
         backlog age, latency under load - use the continuous-batching
         :class:`~repro.serving.scheduler.Scheduler` (DESIGN.md Sec. 11),
-        which produces real ``ResourceSignal``s from arrival traces.
-        This helper stays for pure budget-trace cost modeling.
+        which produces real ``ResourceSignal``s from arrival traces; for
+        a bare budget trace, loop ``store.apply(policy.decide(store,
+        tracker.signal(memory_budget_bytes=b)))`` yourself.  Scheduled
+        for removal two minor releases after 0.8 (see docs/api.md).
 
     Returns {'switches', 'page_in', 'page_out', 'modes'} where 'switches'
     counts decisions that actually moved residency."""
+    warnings.warn(
+        "simulate_policy is deprecated: use serving.scheduler.Scheduler "
+        "for traffic-driven runs, or drive store.apply(policy.decide(...))"
+        " directly for budget traces (removal: two minor releases after "
+        "0.8)", DeprecationWarning, stacklevel=2)
     tracker = SignalTracker()
     in0, out0 = store.ledger.page_in_bytes, store.ledger.page_out_bytes
     switches = 0

@@ -404,116 +404,188 @@ class Scheduler:
         self.bucket_batches = bucket_batches
         self.clock = clock
 
-    def run(self) -> SchedulerReport:
-        eng, store = self.engine, self.engine.store
-        arrivals = self.trace.arrivals()
+        self._started = False
+
+    # -- resumable stepper (DESIGN.md Sec. 14) ----------------------------
+    # run() used to be one monolithic loop; the fleet event loop needs to
+    # interleave MANY schedulers on one shared virtual clock, stepping
+    # whichever replica's next batch starts earliest.  start()/step()/
+    # next_time()/report() expose exactly the old loop, one iteration at
+    # a time; run() below is the single-replica compatibility wrapper and
+    # produces byte-identical reports.
+
+    def start(self) -> None:
+        """Reset the stepper: materialize the arrival trace, empty the
+        queue, rewind the per-run virtual clock to 0."""
         # per-leaf delta stream sizes: lets every scheduled switch be
         # checked against the metadata-computed bytes(delta_k), whatever
         # mix of leaves the policy moved
-        streams = store.leaf_streams()
-        queue = RequestQueue()
-        done: List[ScheduledRequest] = []
-        steps: List[Dict[str, object]] = []
-        switch_records: List[Dict[str, int]] = []
-        i = 0
-        now = 0.0
-        while i < len(arrivals) or len(queue):
-            # -- admit ------------------------------------------------------
-            if not len(queue):
-                now = max(now, arrivals[i].t)   # idle: jump to next arrival
-            while i < len(arrivals) and arrivals[i].t <= now:
-                a = arrivals[i]
-                queue.push(ScheduledRequest(
-                    Request(a.uid, a.prompt, a.max_new_tokens), a.t))
-                i += 1
-            # coalesce: wait (bounded by the oldest waiter's patience) for
-            # arrivals that would fill this batch
-            while (len(queue) < self.max_batch and i < len(arrivals)
-                   and arrivals[i].t
-                   <= queue.oldest_arrival_s() + self.admit_wait_s):
-                a = arrivals[i]
-                now = a.t
-                queue.push(ScheduledRequest(
-                    Request(a.uid, a.prompt, a.max_new_tokens), a.t))
-                i += 1
-            batch = queue.admit(now, self.max_batch)
-            # -- signal -----------------------------------------------------
-            depth = len(queue)                   # backlog BEHIND this batch
-            age = queue.oldest_age_s(now)
-            reqs = [s.request for s in batch]
-            n_filler = 0
-            if self.bucket_batches and len(reqs) < self.max_batch:
-                n_filler = self.max_batch - len(reqs)
-                tpl = batch[-1]
-                reqs = reqs + [Request(-1, tpl.request.prompt,
-                                       tpl.request.max_new_tokens)
-                               for _ in range(n_filler)]
-            # -- decide + page + generate ----------------------------------
-            ev0 = len(store.ledger.events)
-            rungs_before = store.leaf_rungs()
-            rung_before = store.rung
-            failures0 = eng.stats.switch_failures
-            fault_s = 0.0
-            t0 = now
-            if self.clock is not None:
-                # open/close outage windows on the serving timeline; any
-                # stall or retry backoff the fetch path burns during this
-                # step comes back as fault_s and is charged below
-                self.clock.set(now)
-                t0 = self.clock.now()  # may run AHEAD of now: set() is
-                # monotone and fault sleeps only ever push it forward
-            # the pager's deliverable ceiling AT this step (outages and
-            # quarantines lower it; DESIGN.md Sec. 12) - recorded so runs
-            # can show rung availability through a fault window
-            avail_rung = store.max_available_rung()
-            eng.generate(reqs, self.memory_budget_bytes,
-                         queue_depth=depth, backlog_age_s=age)
-            if self.clock is not None:
-                fault_s = self.clock.now() - t0
-            failed = eng.stats.switch_failures - failures0
-            moved = store.ledger.events[ev0:]
-            page_in = sum(e[2] for e in moved)
-            page_out = sum(e[3] for e in moved)
-            if moved:
-                # expected traffic for THIS decision from the per-leaf
-                # rung walk: every page-in/out is a contiguous run of
-                # delta streams, so the sums are exact by construction
-                expect_in = expect_out = 0
-                for path, r1 in store.leaf_rungs().items():
-                    r0 = rungs_before[path]
-                    if r1 > r0:
-                        expect_in += sum(streams[path][1 + r0:1 + r1])
-                    elif r0 > r1:
-                        expect_out += sum(streams[path][1 + r1:1 + r0])
-                switch_records.append(
-                    {"step": len(steps), "from_rung": rung_before,
-                     "to_rung": store.rung, "moves": len(moved),
-                     "page_in": page_in, "page_out": page_out,
-                     "expected_in": expect_in, "expected_out": expect_out})
-            # -- advance the virtual clock ---------------------------------
-            switch_s = self.service.switch_seconds(page_in + page_out,
-                                                   len(moved)) + fault_s
-            batch_s = self.service.batch_seconds(
-                store.resident_bytes(),
-                max(s.request.max_new_tokens for s in batch))
-            now += switch_s + batch_s
-            for s in batch:
-                s.done_s = now
-                s.rung = store.rung
-                s.mode = store.mode
-            done.extend(batch)
-            eng.stats.sched_steps += 1
-            eng.stats.sched_admitted += len(batch)
-            eng.stats.sched_filler += n_filler
-            steps.append({"step": len(steps), "admit_s": batch[0].admit_s,
-                          "done_s": now, "batch": len(batch),
-                          "filler": n_filler, "queue_depth": depth,
-                          "backlog_age_s": age, "mode": store.mode,
-                          "rung": store.rung, "page_in": page_in,
-                          "page_out": page_out, "switch_s": switch_s,
-                          "batch_s": batch_s, "fault_s": fault_s,
-                          "switch_failures": failed,
-                          "avail_rung": avail_rung, "clock_s": t0})
-        return SchedulerReport(requests=done, steps=steps,
-                               switch_records=switch_records, elapsed_s=now,
+        self._streams = self.engine.store.leaf_streams()
+        self._arrivals = self.trace.arrivals()
+        self._queue = RequestQueue()
+        self._done: List[ScheduledRequest] = []
+        self._steps: List[Dict[str, object]] = []
+        self._switch_records: List[Dict[str, int]] = []
+        self._i = 0
+        self._now = 0.0
+        self._started = True
+
+    @property
+    def done(self) -> bool:
+        """True once every arrival has been ingested AND served."""
+        if not self._started:
+            return False
+        return self._i >= len(self._arrivals) and not len(self._queue)
+
+    @property
+    def now(self) -> float:
+        """This replica's virtual time (seconds since its trace began)."""
+        return self._now if self._started else 0.0
+
+    @property
+    def backlog_depth(self) -> int:
+        """Requests waiting at ``now`` (ingested + due-but-uningested) -
+        the load signal the fleet controller rebalances envelopes on."""
+        if not self._started:
+            return 0
+        due = 0
+        j = self._i
+        while j < len(self._arrivals) and self._arrivals[j].t <= self._now:
+            due += 1
+            j += 1
+        return len(self._queue) + due
+
+    def next_time(self) -> Optional[float]:
+        """Virtual time the next step() would begin at, or None when the
+        run is complete - the fleet event loop's heap key."""
+        if not self._started or self.done:
+            return None
+        if len(self._queue):
+            return self._now
+        return max(self._now, self._arrivals[self._i].t)
+
+    def step(self) -> Dict[str, object]:
+        """Run ONE admit -> signal -> decide -> page -> generate batch and
+        return its step record.  Requires start(); raises when done."""
+        if not self._started:
+            raise RuntimeError("call start() before step()")
+        if self.done:
+            raise RuntimeError("scheduler trace is exhausted")
+        eng, store = self.engine, self.engine.store
+        arrivals, queue, streams = self._arrivals, self._queue, self._streams
+        now = self._now
+        # -- admit ----------------------------------------------------------
+        if not len(queue):
+            now = max(now, arrivals[self._i].t)  # idle: jump to next arrival
+        while self._i < len(arrivals) and arrivals[self._i].t <= now:
+            a = arrivals[self._i]
+            queue.push(ScheduledRequest(
+                Request(a.uid, a.prompt, a.max_new_tokens), a.t))
+            self._i += 1
+        # coalesce: wait (bounded by the oldest waiter's patience) for
+        # arrivals that would fill this batch
+        while (len(queue) < self.max_batch and self._i < len(arrivals)
+               and arrivals[self._i].t
+               <= queue.oldest_arrival_s() + self.admit_wait_s):
+            a = arrivals[self._i]
+            now = a.t
+            queue.push(ScheduledRequest(
+                Request(a.uid, a.prompt, a.max_new_tokens), a.t))
+            self._i += 1
+        batch = queue.admit(now, self.max_batch)
+        # -- signal ---------------------------------------------------------
+        depth = len(queue)                   # backlog BEHIND this batch
+        age = queue.oldest_age_s(now)
+        reqs = [s.request for s in batch]
+        n_filler = 0
+        if self.bucket_batches and len(reqs) < self.max_batch:
+            n_filler = self.max_batch - len(reqs)
+            tpl = batch[-1]
+            reqs = reqs + [Request(-1, tpl.request.prompt,
+                                   tpl.request.max_new_tokens)
+                           for _ in range(n_filler)]
+        # -- decide + page + generate --------------------------------------
+        ev0 = len(store.ledger.events)
+        rungs_before = store.leaf_rungs()
+        rung_before = store.rung
+        failures0 = eng.stats.switch_failures
+        fault_s = 0.0
+        t0 = now
+        if self.clock is not None:
+            # open/close outage windows on the serving timeline; any
+            # stall or retry backoff the fetch path burns during this
+            # step comes back as fault_s and is charged below
+            self.clock.set(now)
+            t0 = self.clock.now()  # may run AHEAD of now: set() is
+            # monotone and fault sleeps only ever push it forward
+        # the pager's deliverable ceiling AT this step (outages and
+        # quarantines lower it; DESIGN.md Sec. 12) - recorded so runs
+        # can show rung availability through a fault window
+        avail_rung = store.max_available_rung()
+        eng.generate(reqs, self.memory_budget_bytes,
+                     queue_depth=depth, backlog_age_s=age)
+        if self.clock is not None:
+            fault_s = self.clock.now() - t0
+        failed = eng.stats.switch_failures - failures0
+        moved = store.ledger.events[ev0:]
+        page_in = sum(e[2] for e in moved)
+        page_out = sum(e[3] for e in moved)
+        if moved:
+            # expected traffic for THIS decision from the per-leaf
+            # rung walk: every page-in/out is a contiguous run of
+            # delta streams, so the sums are exact by construction
+            expect_in = expect_out = 0
+            for path, r1 in store.leaf_rungs().items():
+                r0 = rungs_before[path]
+                if r1 > r0:
+                    expect_in += sum(streams[path][1 + r0:1 + r1])
+                elif r0 > r1:
+                    expect_out += sum(streams[path][1 + r1:1 + r0])
+            self._switch_records.append(
+                {"step": len(self._steps), "from_rung": rung_before,
+                 "to_rung": store.rung, "moves": len(moved),
+                 "page_in": page_in, "page_out": page_out,
+                 "expected_in": expect_in, "expected_out": expect_out})
+        # -- advance the virtual clock -------------------------------------
+        switch_s = self.service.switch_seconds(page_in + page_out,
+                                               len(moved)) + fault_s
+        batch_s = self.service.batch_seconds(
+            store.resident_bytes(),
+            max(s.request.max_new_tokens for s in batch))
+        now += switch_s + batch_s
+        for s in batch:
+            s.done_s = now
+            s.rung = store.rung
+            s.mode = store.mode
+        self._done.extend(batch)
+        eng.stats.sched_steps += 1
+        eng.stats.sched_admitted += len(batch)
+        eng.stats.sched_filler += n_filler
+        rec = {"step": len(self._steps), "admit_s": batch[0].admit_s,
+               "done_s": now, "batch": len(batch),
+               "filler": n_filler, "queue_depth": depth,
+               "backlog_age_s": age, "mode": store.mode,
+               "rung": store.rung, "page_in": page_in,
+               "page_out": page_out, "switch_s": switch_s,
+               "batch_s": batch_s, "fault_s": fault_s,
+               "switch_failures": failed,
+               "avail_rung": avail_rung, "clock_s": t0}
+        self._steps.append(rec)
+        self._now = now
+        return rec
+
+    def report(self) -> SchedulerReport:
+        """The run-so-far as a :class:`SchedulerReport` (complete once
+        :attr:`done`)."""
+        if not self._started:
+            raise RuntimeError("call start() (or run()) before report()")
+        return SchedulerReport(requests=self._done, steps=self._steps,
+                               switch_records=self._switch_records,
+                               elapsed_s=self._now,
                                trace_kind=self.trace.kind)
+
+    def run(self) -> SchedulerReport:
+        self.start()
+        while not self.done:
+            self.step()
+        return self.report()

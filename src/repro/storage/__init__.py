@@ -3,6 +3,6 @@
 from .artifact import (Artifact, ArtifactError, load_store, open_artifact,
                        save_artifact)
 from .pager import (ChaosPager, CorruptStreamError, DeltaPager, FilePager,
-                    InMemoryPager, Outage, PagerError, ResilientPager,
-                    RetryPolicy, StreamHealth, ThrottledPager,
+                    InMemoryPager, LinkBudget, Outage, PagerError,
+                    ResilientPager, RetryPolicy, StreamHealth, ThrottledPager,
                     TransientPagerError, VirtualClock, WallClock)

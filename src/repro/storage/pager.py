@@ -289,6 +289,49 @@ class FilePager:
         return False
 
 
+class LinkBudget:
+    """ONE physical link shared by any number of pagers (DESIGN.md
+    Sec. 14).
+
+    Before this existed, two :class:`ThrottledPager`\\ s "over the same
+    link" each accounted bandwidth independently - two concurrent fetches
+    of ``B`` bytes both finished after ``B/bw`` seconds, as if the link
+    doubled.  A LinkBudget serializes instead: it remembers when the link
+    frees up (:attr:`busy_until`), and every transfer starts at
+    ``max(now, busy_until)``.  The second of two concurrent fetches waits
+    for the first, exactly like frames on a wire.
+
+    ``reserve(nbytes, now)`` books one transfer and returns
+    ``(start_s, finish_s, total_s)`` where ``total_s = finish_s - now``
+    is what the CALLER experienced (queueing + latency + transfer).
+    Aggregate accounting: :attr:`bytes_moved`, :attr:`busy_s` (seconds
+    the wire itself carried bits), :attr:`queued_s` (seconds callers
+    spent waiting behind other transfers)."""
+
+    def __init__(self, bandwidth_bytes_per_s: float = 12.5e6,
+                 latency_s: float = 0.0):
+        if bandwidth_bytes_per_s <= 0:
+            raise ValueError("bandwidth must be > 0")
+        self.bandwidth_bytes_per_s = float(bandwidth_bytes_per_s)
+        self.latency_s = float(latency_s)
+        self.busy_until = 0.0
+        self.bytes_moved = 0
+        self.busy_s = 0.0
+        self.queued_s = 0.0
+        self.transfers = 0
+
+    def reserve(self, nbytes: int, now: float) -> Tuple[float, float, float]:
+        start = max(float(now), self.busy_until)
+        hold = self.latency_s + nbytes / self.bandwidth_bytes_per_s
+        finish = start + hold
+        self.busy_until = finish
+        self.bytes_moved += int(nbytes)
+        self.busy_s += hold
+        self.queued_s += start - float(now)
+        self.transfers += 1
+        return start, finish, finish - float(now)
+
+
 class ThrottledPager:
     """Simulated-link wrapper: every fetch pays ``latency_s`` plus
     ``nbytes / bandwidth_bytes_per_s`` of virtual transfer time, recorded
@@ -300,13 +343,29 @@ class ThrottledPager:
 
     ``clock`` defaults to a :class:`WallClock`; pass a
     :class:`VirtualClock` and throttled-link tests (and ``bench_chaos``)
-    run the same schedule deterministically, without real sleeping."""
+    run the same schedule deterministically, without real sleeping.
+
+    ``link`` shares ONE :class:`LinkBudget` between several pagers: each
+    fetch reserves the wire through the shared budget, so concurrent
+    fetches SERIALIZE (the second waits out the first's transfer, on the
+    common clock the budget's timeline is read from) instead of each
+    pretending it owns the full bandwidth.  The fleet distribution tier
+    (DESIGN.md Sec. 14) uses this for the shared origin->edge uplink.
+    Without ``link`` the pager keeps the classic single-tenant timing:
+    every fetch is charged its standalone ``latency + nbytes/bandwidth``
+    hold, never queueing behind its own earlier transfers (unchanged from
+    the pre-LinkBudget implementation)."""
 
     def __init__(self, inner: DeltaPager,
                  bandwidth_bytes_per_s: float = 12.5e6,   # 100 Mbit/s
-                 latency_s: float = 0.0, sleep: bool = False, clock=None):
-        if bandwidth_bytes_per_s <= 0:
+                 latency_s: float = 0.0, sleep: bool = False, clock=None,
+                 link: Optional[LinkBudget] = None):
+        if link is not None:
+            bandwidth_bytes_per_s = link.bandwidth_bytes_per_s
+            latency_s = link.latency_s
+        elif bandwidth_bytes_per_s <= 0:
             raise ValueError("bandwidth must be > 0")
+        self.link = link
         self.inner = inner
         self.bandwidth_bytes_per_s = float(bandwidth_bytes_per_s)
         self.latency_s = float(latency_s)
@@ -320,7 +379,12 @@ class ThrottledPager:
     def fetch(self, path: str, level: int) -> jax.Array:
         arr = self.inner.fetch(path, level)
         nb = int(arr.size) * arr.dtype.itemsize
-        dt = self.latency_s + nb / self.bandwidth_bytes_per_s
+        if self.link is not None:
+            # shared wire: dt is the caller-observed seconds, including
+            # time queued behind whatever other pagers put on the link
+            _, _, dt = self.link.reserve(nb, self.clock.now())
+        else:
+            dt = self.latency_s + nb / self.bandwidth_bytes_per_s
         self.bytes_moved += nb
         self.simulated_seconds += dt
         self.transfers.append((path, level, nb, dt))

@@ -1,0 +1,266 @@
+"""Fleet-layer tests (DESIGN.md Sec. 14): distribution dedup/multicast
+accounting, controller envelope math, end-to-end transport wins over the
+unicast and model-zoo baselines, per-replica ledger exactness under a
+chaos storm on a subset of replicas, and bit-identical FleetReports
+across reruns with the same seeds and specs."""
+import json
+
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.api import (ChaosProfile, DeltaDistribution, FleetController,
+                       InMemoryPager, QuantRecipe, ReplicaSpec, VirtualClock,
+                       build_fleet, quantize)
+from repro.configs import get_config
+from repro.core import NestQuantStore
+from repro.models import make_model
+
+N_REPLICAS = 4
+REQUESTS = 8
+
+
+@pytest.fixture(scope="module")
+def shared_tree():
+    cfg = get_config("qwen2-1.5b").reduced()
+    params = make_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, quantize(params, QuantRecipe(bits=(8, 6, 4)))
+
+
+def _specs(n=N_REPLICAS, requests=REQUESTS):
+    """Heterogeneous mix: mixed links, burst on even replicas (the
+    skewed shape), a chaos storm on replicas 0 and 2 only."""
+    links = (100.0, 25.0, 400.0)
+    return [ReplicaSpec(
+        name=f"replica{i}", link_mbps=links[i % len(links)],
+        trace="burst" if i % 2 == 0 else "poisson",
+        n_requests=requests, seed=i, policy="load", max_batch=4,
+        new_tokens=2,
+        chaos=(ChaosProfile(seed=100 + i, p_corrupt=0.0)
+               if i % 2 == 0 else None))
+        for i in range(n)]
+
+
+def _run(cfg, nested, *, mode="rebalance"):
+    fleet = build_fleet(_specs(), cfg=cfg, nested_params=nested)
+    store0 = fleet.replicas[0].store
+    top = store0.rung_resident_bytes(store0.num_rungs - 1)
+    fleet.controller = FleetController(2 * N_REPLICAS * top,
+                                       interval_s=0.002, mode=mode)
+    return fleet, fleet.run()
+
+
+@pytest.fixture(scope="module")
+def fleet_run(shared_tree):
+    cfg, nested = shared_tree
+    return _run(cfg, nested)
+
+
+# ---------------------------------------------------------------------------
+# distribution tier (no model needed)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def small_dist():
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 64))
+    nested = quantize({"w": w}, QuantRecipe(bits=(8, 6, 4), rounding="rtn"))
+    store = NestQuantStore(nested, mode="part")
+    path = next(iter(store.leaf_streams()))
+    return nested, path
+
+
+def test_distribution_dedups_and_multicasts(small_dist):
+    """Two replicas pulling the same stream at the same instant: ONE WAN
+    fetch, one local transmission; the unicast baseline pays both hops
+    per fetch.  A later pull outside the multicast window re-pays only
+    the local hop (the edge cache is permanent)."""
+    nested, path = small_dist
+    clock = VirtualClock()
+    dist = DeltaDistribution(InMemoryPager.from_tree(nested), clock=clock,
+                             multicast_window_s=0.05)
+    a, b = dist.client("a"), dist.client("b")
+    arr = a.fetch(path, 0)
+    nb = int(arr.size) * arr.dtype.itemsize
+    assert (dist.origin_bytes, dist.edge_bytes) == (nb, nb)
+    assert dist.unicast_bytes == 2 * nb and dist.dedup_hits == 0
+
+    b.fetch(path, 0)                    # same instant: dedup + multicast
+    assert dist.origin_bytes == nb      # WAN hop ran once, fleet-wide
+    assert dist.edge_bytes == nb        # b rode a's transmission
+    assert (dist.dedup_hits, dist.multicast_joins) == (1, 1)
+    assert dist.unicast_bytes == 4 * nb
+    assert dist.fleet_bytes() == 2 * nb < dist.unicast_bytes
+
+    clock.sleep(1.0)                    # outside the multicast window
+    dist.client("c").fetch(path, 0)
+    assert dist.origin_bytes == nb      # still cached at the edge
+    assert dist.edge_bytes == 2 * nb    # but a fresh local transmission
+    assert (dist.dedup_hits, dist.multicast_joins) == (2, 1)
+    assert dist.hot_segments(1) == [(path, 0, 3)]
+    stats = dist.stats()
+    assert stats["fleet_bytes"] == 3 * nb
+    assert stats["edge_cached_streams"] == 1
+
+
+def test_edge_client_evict_is_replica_local(small_dist):
+    """A replica downshifting (evict) must NOT purge the edge cache:
+    its re-climb is a dedup hit, which is why a downshift/re-climb cycle
+    costs the fleet less than unicast even at N=1."""
+    nested, path = small_dist
+    clock = VirtualClock()
+    dist = DeltaDistribution(InMemoryPager.from_tree(nested), clock=clock,
+                             multicast_window_s=0.0)
+    a = dist.client("a")
+    arr = a.fetch(path, 0)
+    nb = int(arr.size) * arr.dtype.itemsize
+    assert a.resident_bytes() == nb
+    a.evict(path, 0)
+    assert a.resident_bytes() == 0
+    clock.sleep(1.0)
+    a.fetch(path, 0)                    # re-climb after the downshift
+    assert dist.dedup_hits == 1 and dist.origin_bytes == nb
+    assert a.available(path, 0)
+
+
+def test_distribution_validation(small_dist):
+    nested, _ = small_dist
+    with pytest.raises(ValueError, match="multicast_window_s"):
+        DeltaDistribution(InMemoryPager.from_tree(nested),
+                          multicast_window_s=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# controller envelope math (no model needed)
+# ---------------------------------------------------------------------------
+class _StubReplica:
+    def __init__(self, name, backlog, done=False, base_bytes=100):
+        self.name = name
+        self.scheduler = type("S", (), {"backlog_depth": backlog,
+                                        "done": done})()
+        self.store = type("St", (), {"rung_resident_bytes":
+                                     staticmethod(lambda r: base_bytes)})()
+        self.envelopes = []
+
+    def set_envelope(self, budget, now):
+        self.envelopes.append((now, budget))
+
+
+def test_controller_envelope_math():
+    reps = [_StubReplica("r0", backlog=10), _StubReplica("r1", backlog=0),
+            _StubReplica("r2", backlog=0), _StubReplica("r3", backlog=0)]
+    equal = FleetController(1000, mode="equal")
+    assert [e.budget_bytes for e in equal.envelopes(reps)] == [250] * 4
+
+    reb = FleetController(1000, mode="rebalance", hot_depth=4)
+    envs = reb.envelopes(reps)
+    # r0 is burning: pinned to base-rung bytes; the others share the rest
+    assert envs[0].budget_bytes == 100 and envs[0].reason == "pinned-hot"
+    assert [e.budget_bytes for e in envs[1:]] == [300] * 3
+    assert {e.reason for e in envs[1:]} == {"surplus"}
+
+    # a finished replica is never pinned, whatever its last backlog was
+    reps[0].scheduler.done = True
+    assert [e.budget_bytes for e in reb.envelopes(reps)] == [250] * 4
+    reps[0].scheduler.done = False
+
+    # everyone hot = nothing to shift between: back to the equal split
+    for r in reps:
+        r.scheduler.backlog_depth = 10
+    assert [e.budget_bytes for e in reb.envelopes(reps)] == [250] * 4
+
+    # the surplus share never drops below base-rung bytes (unserveable)
+    reps[0].scheduler.backlog_depth = 10
+    for r in reps[1:]:
+        r.scheduler.backlog_depth = 0
+    tight = FleetController(320, mode="rebalance", hot_depth=4)
+    assert [e.budget_bytes for e in tight.envelopes(reps)] == \
+        [100, 100, 100, 100]
+
+    # apply() writes the envelope through the controller->local contract
+    reb.apply(reps, now=0.5)
+    assert reps[0].envelopes == [(0.5, 100)]
+    assert reb.ticks == 1
+
+
+def test_controller_validation():
+    with pytest.raises(ValueError, match="mode"):
+        FleetController(1000, mode="chaotic")
+    with pytest.raises(ValueError, match="total_budget_bytes"):
+        FleetController(0)
+    with pytest.raises(ValueError, match="interval_s"):
+        FleetController(1000, interval_s=0.0)
+    with pytest.raises(ValueError, match="unique"):
+        cfgless = _StubReplica("dup", 0)
+        from repro.api import Fleet
+        Fleet([cfgless, _StubReplica("dup", 0)], distribution=None,
+              clock=VirtualClock())
+
+
+def test_replica_spec_validation():
+    with pytest.raises(ValueError, match="link_mbps"):
+        ReplicaSpec(name="r", link_mbps=0.0)
+    with pytest.raises(ValueError, match="n_requests"):
+        ReplicaSpec(name="r", n_requests=0)
+
+
+# ---------------------------------------------------------------------------
+# end to end: transport wins, ledger exactness, chaos on a subset
+# ---------------------------------------------------------------------------
+def test_fleet_beats_unicast_and_zoo(fleet_run):
+    """The ISSUE's headline transport claim at test scale: with the
+    distribution tier the fleet moves strictly fewer bytes than N
+    independent unicast deployments AND than a K-model zoo serving the
+    same switch sequence."""
+    _, report = fleet_run
+    s = report.summary()
+    assert s["switches"] > 0            # the trace actually exercised it
+    assert report.fleet_bytes < report.unicast_bytes
+    assert report.fleet_bytes < report.zoo_bytes
+    assert s["dedup_hits"] > 0
+    assert report.transport["origin_bytes"] <= \
+        report.transport["edge_cached_bytes"]
+
+
+def test_fleet_ledgers_exact_under_chaos(fleet_run):
+    """Every replica's observed page bytes == metadata-computed
+    bytes(delta_k), including the chaos-afflicted replicas (faults are
+    retried, never silently double-charged)."""
+    fleet, report = fleet_run
+    assert report.verify_ledgers() == sum(
+        len(r.switch_records) for r in report.replicas.values()) > 0
+    # the storm ran where the specs put it: replicas 0 and 2 only
+    assert fleet.replicas[0].chaos is not None
+    assert fleet.replicas[1].chaos is None
+    injected = sum(sum(fleet.replicas[i].chaos.faults.values())
+                   for i in (0, 2))
+    assert injected > 0                 # faults genuinely fired ...
+    for name, rep in report.replicas.items():
+        assert len(rep.requests) == REQUESTS    # ... and nobody dropped
+
+
+def test_fleet_report_shape(fleet_run):
+    _, report = fleet_run
+    assert set(report.replicas) == {f"replica{i}" for i in range(N_REPLICAS)}
+    assert report.controller_mode == "rebalance"
+    lat = report.pooled_latency("total")
+    assert 0 < lat["p50"] <= lat["p95"] <= lat["max"]
+    # every replica saw the tick-0 envelope plus the periodic rebalances
+    for log in report.envelopes.values():
+        assert log and log[0][0] == 0.0
+    d = report.to_dict()
+    assert set(d) == {"controller_mode", "elapsed_s", "transport", "zoo",
+                      "pooled", "envelopes", "replicas"}
+    json.dumps(d)                       # JSON-able, no numpy leakage
+
+
+# ---------------------------------------------------------------------------
+# determinism: the fleet is a simulation, not a race
+# ---------------------------------------------------------------------------
+def test_fleet_is_deterministic(shared_tree, fleet_run):
+    """Same seeds + same specs = bit-identical FleetReport - including
+    the chaos storm on the subset, the multicast windows on the shared
+    clock, and every controller envelope decision."""
+    cfg, nested = shared_tree
+    _, first = fleet_run
+    _, second = _run(cfg, nested)
+    assert json.dumps(first.to_dict(), sort_keys=True) == \
+        json.dumps(second.to_dict(), sort_keys=True)

@@ -127,13 +127,44 @@ def test_budget_policy_matches_best_rung_for(store):
     assert isinstance(pol, RungPolicy)
 
 
+def _drive_budget_trace(policy, store, budgets):
+    """The explicit decide/apply loop simulate_policy is deprecated in
+    favor of (for bare budget traces)."""
+    from repro.serving.policies import SignalTracker
+    tracker = SignalTracker()
+    out = {"switches": 0, "modes": []}
+    for budget in budgets:
+        rep = store.apply(policy.decide(
+            store, tracker.signal(memory_budget_bytes=budget)))
+        out["switches"] += int(rep["moves"] > 0)
+        tracker.note(rep["moves"] > 0)
+        out["modes"].append(store.mode)
+    out["page_in"] = store.ledger.page_in_bytes
+    out["page_out"] = store.ledger.page_out_bytes
+    return out
+
+
+def test_simulate_policy_deprecated_but_equivalent(mixed_nested):
+    """The shim warns, and the explicit loop reproduces it exactly."""
+    need = _needs(NestQuantStore(mixed_nested, mode="part"))
+    osc = [need[-1] * 2, need[0], need[-1] * 2]
+    with pytest.warns(DeprecationWarning, match="simulate_policy"):
+        legacy = simulate_policy(BudgetPolicy(),
+                                 NestQuantStore(mixed_nested, mode="full"),
+                                 osc)
+    ported = _drive_budget_trace(BudgetPolicy(),
+                                 NestQuantStore(mixed_nested, mode="full"),
+                                 osc)
+    assert legacy == ported
+
+
 def test_hysteresis_reduces_switches_on_oscillation(mixed_nested):
     need = _needs(NestQuantStore(mixed_nested, mode="part"))
     osc = [need[-1] * 2, need[0]] * 3 + [need[-1] * 2] * 5
-    raw = simulate_policy(BudgetPolicy(),
-                          NestQuantStore(mixed_nested, mode="full"), osc)
-    hyst = simulate_policy(HysteresisPolicy(dwell=4),
-                           NestQuantStore(mixed_nested, mode="full"), osc)
+    raw = _drive_budget_trace(BudgetPolicy(),
+                              NestQuantStore(mixed_nested, mode="full"), osc)
+    hyst = _drive_budget_trace(HysteresisPolicy(dwell=4),
+                               NestQuantStore(mixed_nested, mode="full"), osc)
     assert hyst["switches"] < raw["switches"]
     assert (hyst["page_in"] + hyst["page_out"]
             < raw["page_in"] + raw["page_out"])

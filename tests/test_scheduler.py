@@ -159,6 +159,44 @@ def test_engine_scheduler_counters(burst_run):
 
 
 # ---------------------------------------------------------------------------
+# resumable stepper
+# ---------------------------------------------------------------------------
+def test_stepper_loop_equals_run(setup):
+    """run() is sugar over start()/step()/report(): driving the stepper
+    by hand (the fleet event loop's contract) produces the identical
+    report - same steps, same switch records, same latencies."""
+    cfg, nested = setup
+
+    def build():
+        svc = ServiceModel()
+        store = NestQuantStore(nested, mode="full", dtype=jnp.float32)
+        engine = ServeEngine(
+            cfg, store, max_batch=MAX_BATCH, max_len=32,
+            policy=HysteresisPolicy(LoadAdaptivePolicy(high_depth=MAX_BATCH),
+                                    dwell=2))
+        return Scheduler(engine, _make_trace(store, svc, n=16,
+                                             vocab_size=cfg.vocab_size), svc)
+
+    ran = build().run()
+    s = build()
+    s.start()
+    assert not s.done and s.backlog_depth == 0
+    seen_times = []
+    while not s.done:
+        t = s.next_time()
+        assert t is not None
+        seen_times.append(t)
+        s.step()
+    assert s.next_time() is None
+    assert seen_times == sorted(seen_times)      # heap-safe: non-decreasing
+    stepped = s.report()
+    assert ran.summary() == stepped.summary()
+    assert ran.switch_records == stepped.switch_records
+    assert [r.total_s for r in ran.requests] == \
+        [r.total_s for r in stepped.requests]
+
+
+# ---------------------------------------------------------------------------
 # admission control
 # ---------------------------------------------------------------------------
 def test_over_admission_raises(setup, burst_run):

@@ -11,9 +11,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.api import (Artifact, ArtifactError, FilePager, InMemoryPager,
-                       LayerOverride, QuantRecipe, Request, RungAssignment,
-                       ServeEngine, ThrottledPager, load_store, open_artifact,
-                       quantize, save_artifact)
+                       LayerOverride, LinkBudget, QuantRecipe, Request,
+                       RungAssignment, ServeEngine, ThrottledPager,
+                       VirtualClock, load_store, open_artifact, quantize,
+                       save_artifact)
 from repro.configs import get_config
 from repro.core import NestQuantStore
 from repro.core.nesting import NestedTensor, nest_quantize
@@ -168,6 +169,40 @@ def test_throttled_pager_accounts_link_time(tree, art_dir):
     expect = sum(0.5 + nb / 1e6 for (_, _, nb, _) in link.transfers)
     assert link.simulated_seconds == pytest.approx(expect)
     assert link.simulated_seconds >= 0.5 * len(link.transfers)
+
+
+def test_shared_link_budget_serializes_pagers(tree, art_dir):
+    """Two ThrottledPagers over ONE LinkBudget share the wire: with a
+    non-advancing clock the second pager's transfer queues behind the
+    first's (observed dt includes the wait), while private pagers keep
+    the classic standalone timing - each fetch charged exactly
+    latency + nbytes/bandwidth, never queueing behind itself."""
+    clock = VirtualClock()
+    wire = LinkBudget(bandwidth_bytes_per_s=1e6, latency_s=0.0)
+    a = ThrottledPager(FilePager(open_artifact(art_dir)), link=wire,
+                       clock=clock)
+    b = ThrottledPager(FilePager(open_artifact(art_dir)), link=wire,
+                       clock=clock)
+    sa = load_store(art_dir, pager=a)
+    sb = load_store(art_dir, pager=b)
+    path = next(iter(sa.leaf_streams()))
+    arr_a = sa.pager.fetch(path, 0)
+    nb = int(arr_a.size) * arr_a.dtype.itemsize
+    hold = nb / 1e6
+    # a owns an idle wire: no queueing
+    assert a.transfers[-1][3] == pytest.approx(hold)
+    # b asks at the SAME instant (clock never advanced): it waits out a's
+    # transfer, so its observed seconds are queue + its own hold
+    sb.pager.fetch(path, 0)
+    assert b.transfers[-1][3] == pytest.approx(2 * hold)
+    assert wire.queued_s == pytest.approx(hold)
+    assert wire.bytes_moved == 2 * nb and wire.transfers == 2
+    assert wire.busy_s == pytest.approx(2 * hold)
+    # a private pager on the same artifact never queues behind the wire
+    solo = ThrottledPager(FilePager(open_artifact(art_dir)),
+                          bandwidth_bytes_per_s=1e6, clock=clock)
+    load_store(art_dir, pager=solo).pager.fetch(path, 0)
+    assert solo.transfers[-1][3] == pytest.approx(hold)
 
 
 def test_metadata_byte_accounting_equals_array_sizes():
