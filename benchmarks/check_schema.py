@@ -42,6 +42,14 @@ REQUIRED_ROWS = {
         r"table6_layer_relerr_h[0-9]+",
         r"table6_top1_agree_h[0-9]+",
     ),
+    "BENCH_speculative.json": (
+        r"spec_bit_identical",
+        r"spec_acceptance",
+        r"spec_tokens_per_verify",
+        r"spec_speedup_steady",
+        r"spec_burst_gating",
+        r"spec_zero_retrace",
+    ),
     "BENCH_fleet.json": (
         r"fleet_scaling_N1\b",
         r"fleet_scaling_N4\b",

@@ -24,8 +24,8 @@ def main() -> None:
 
     from . import (bench_chaos, bench_cliff, bench_fleet, bench_kernels,
                    bench_nesting_quality, bench_numerical_errors,
-                   bench_serving, bench_similarity, bench_storage,
-                   bench_switching, bench_transport, roofline)
+                   bench_serving, bench_similarity, bench_speculative,
+                   bench_storage, bench_switching, bench_transport, roofline)
     suites = [
         ("table7_numerical_errors", bench_numerical_errors.run),
         ("table4_5_similarity", bench_similarity.run),
@@ -35,6 +35,7 @@ def main() -> None:
         ("table11_switching", bench_switching.run),
         ("transport", bench_transport.run),
         ("serving", bench_serving.run),
+        ("speculative", bench_speculative.run),
         ("chaos", bench_chaos.run),
         ("fleet", bench_fleet.run),
         ("kernels", bench_kernels.run),

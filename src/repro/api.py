@@ -30,12 +30,14 @@ from .core.search import (LayerSensitivity, RungScore, SearchResult,
 from .core.switching import (NestQuantStore, RungAssignment, SwitchLedger,
                              diverse_ladder_bytes)
 from .models import make_model
-from .serving.engine import EngineStats, Request, ServeEngine
+from .serving.engine import (DecodeProfile, EngineStats, Request, ServeEngine,
+                             SpecConfig, SpeculativeDecoder)
 from .serving.policies import (POLICIES, BudgetPolicy, DeliveryHealth,
                                FailureAwarePolicy, HysteresisPolicy,
                                LoadAdaptivePolicy, QualityFloorPolicy,
                                ResourceSignal, RungPolicy, SignalTracker,
-                               StaticRungPolicy, make_policy, simulate_policy)
+                               StaticRungPolicy, make_policy,
+                               resolve_draft_ok, simulate_policy)
 from .serving.scheduler import (LoadGenerator, ScheduledRequest, Scheduler,
                                 SchedulerReport, ServiceModel, calibrate_qps)
 from .fleet import (BudgetEnvelope, ChaosProfile, DeltaDistribution,
@@ -66,6 +68,8 @@ __all__ = [
     "make_policy", "simulate_policy",
     # serving
     "ServeEngine", "Request", "EngineStats",
+    # self-speculative ladder decoding (DESIGN.md Sec. 15)
+    "SpeculativeDecoder", "SpecConfig", "DecodeProfile", "resolve_draft_ok",
     # load-adaptive scheduling (DESIGN.md Sec. 11)
     "Scheduler", "SchedulerReport", "ScheduledRequest", "LoadGenerator",
     "ServiceModel", "calibrate_qps",

@@ -479,6 +479,63 @@ class NestQuantStore:
             out.append((path, leaf))
         return out
 
+    def params_for(self, rungs) -> Dict:
+        """Serving tree with per-leaf rung stamps ``rungs`` (an int or a
+        ``{keystr: rung}`` map), clamped to the CURRENT residency - the
+        draft-side read of the resident artifact (O(#leaves) metadata
+        flip; no paging, no ledger events).  Unmapped leaves keep their
+        current stamp."""
+        if isinstance(rungs, int):
+            rungs = {p: rungs for p in self._leaf_paths}
+        clamped = {p: max(0, min(int(r), self._leaf_rungs[p]))
+                   for p, r in rungs.items() if p in self._leaf_rungs}
+        return set_tree_rung(self.nested_params, clamped)
+
+    def rung_view(self, rung: int, *, stamp=None) -> Dict:
+        """The packed tree AS IF uniform rung ``rung`` were resident,
+        without changing actual residency (no ledger events).
+
+        Each nested leaf carries exactly its first ``min(rung, top)``
+        delta streams - streams not currently resident are fetched
+        transiently through the pager (and evicted again), streams
+        resident beyond the view are dropped from the copy - and is
+        stamped ``stamp`` (an int or a ``{keystr: rung}`` map, default
+        ``rung``; clamped to the view's residency).  The resulting
+        pytree structure (delta-residency pattern + rung aux) matches
+        ``params()`` after ``to_rung(rung)`` bit-for-bit, which is what
+        engine warm-up pre-traces against so a later live switch hits
+        the jit cache instead of recompiling (DESIGN.md Sec. 15).  A
+        draft view uses ``stamp < rung`` - same residency, lower rung
+        read - matching the speculative decoder's draft parameters."""
+        rung = check_rung(rung, self.num_rungs)
+        out = []
+        for i, leaf in enumerate(self._flat):
+            if not isinstance(leaf, NestedTensor):
+                out.append(leaf)
+                continue
+            path = self._leaf_paths_by_index.get(i)
+            r = min(rung, leaf.top)
+            ds = list(leaf.deltas)
+            fetched = []
+            try:
+                for j in range(r):
+                    if ds[j] is None:
+                        ds[j] = self.pager.fetch(path, j)
+                        fetched.append(j)
+            finally:            # transient: evict even on a failed fetch
+                for j in fetched:
+                    self.pager.evict(path, j)
+            ds = ds[:r] + [None] * (len(ds) - r)
+            s = stamp.get(path, r) if isinstance(stamp, dict) else (
+                r if stamp is None else stamp)
+            s = min(check_rung(s, self.num_rungs), r)
+            out.append(leaf.with_deltas(tuple(ds)).with_rung(s))
+        return jax.tree_util.tree_unflatten(self._treedef, out)
+
+    @property
+    def _leaf_paths_by_index(self) -> Dict[int, str]:
+        return {self._leaf_index[p]: p for p in self._leaf_paths}
+
     def resolve_assignment(self, assignment: RungAssignment) -> Dict[str, int]:
         """Concrete per-leaf target rungs under ``assignment`` (clamped to
         each leaf's ladder)."""

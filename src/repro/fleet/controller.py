@@ -320,7 +320,9 @@ def build_fleet(specs: Sequence[ReplicaSpec], *, cfg, nested_params,
                              uplink=uplink)
     model = make_model(cfg)
     compiled = (jax.jit(model.prefill),
-                jax.jit(model.decode_step, donate_argnums=(2,)))
+                jax.jit(model.decode_step, donate_argnums=(2,)),
+                jax.jit(model.decode_chunk, donate_argnums=(2,))
+                if model.decode_chunk is not None else None)
     replicas = [build_replica(spec, cfg=cfg, nested_params=nested_params,
                               distribution=dist, clock=clock,
                               vocab_size=cfg.vocab_size, model=model,

@@ -33,6 +33,13 @@
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
       --bits 8,6,4 --trace burst --requests 200 --new-tokens 2 \
       --policy failure --chaos --chaos-transient 0.3
+
+  # self-speculative ladder decoding (DESIGN.md Sec. 15): the part-bit
+  # rung drafts K tokens, ONE chunked full-bit pass verifies them -
+  # bit-identical output, fewer weight-streaming bytes per token
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+      --bits 16,8 --trace poisson --requests 40 --new-tokens 16 \
+      --speculate 4 --draft-rung 0
 """
 from __future__ import annotations
 
@@ -91,7 +98,23 @@ def main(argv=None):
     ap.add_argument("--link-mbps", type=float, default=None,
                     help="with --artifact: simulate paging over an N Mbit/s "
                          "link (ThrottledPager) and report transfer seconds")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="self-speculative decoding (DESIGN.md Sec. 15): "
+                         "draft K tokens per round at the draft rung, "
+                         "verify with ONE chunked full-residency pass "
+                         "(0 = off).  With --trace, drafting is armed and "
+                         "the policy gates it per batch on backlog depth")
+    ap.add_argument("--draft-rung", default="0", metavar="R",
+                    help="draft rung for --speculate: an int rung index or "
+                         "'floor' (per-leaf QualityFloorPolicy floors; "
+                         "needs --policy quality)")
     args = ap.parse_args(argv)
+    spec = None
+    if args.speculate:
+        from ..api import SpecConfig
+        draft = (args.draft_rung if args.draft_rung == "floor"
+                 else int(args.draft_rung))
+        spec = SpecConfig(k=args.speculate, draft=draft)
     if args.policy in ("load", "failure") and not args.trace:
         # the budget-schedule path reports the batch size as queue_depth,
         # which would read as permanent backlog pressure to the load policy
@@ -219,9 +242,22 @@ def main(argv=None):
               f"{qps:.0f} req/s steady"
               + (f", {burst:.0f} req/s burst" if args.trace == "burst"
                  else ""))
-        report = Scheduler(engine, trace, svc,
-                           max_batch=args.max_batch, clock=clock).run()
+        if spec is not None:
+            # pre-trace every (rung, shape) dispatch, draft stamp and
+            # verify chunk included - no mid-serve retrace stalls
+            calls = engine.warmup(trace.prompt_len, spec=spec)
+            print(f"[speculate] armed k={spec.k} draft={spec.draft!r}; "
+                  f"warmup pre-traced {calls} dispatch shapes")
+        report = Scheduler(engine, trace, svc, max_batch=args.max_batch,
+                           clock=clock, speculate=spec).run()
         print("[load] " + report.table())
+        if spec is not None:
+            s = report.summary()
+            print(f"[speculate] {s['spec_steps']}/{len(report.steps)} "
+                  f"batches drafted; acceptance="
+                  f"{s['spec_acceptance']:.3f} "
+                  f"({s['spec_accepted']}/{s['spec_drafted']} tokens); "
+                  f"output bit-identical to plain full-bit greedy decode")
         for rec in report.switch_records:
             print(f"  step {rec['step']}: rung {rec['from_rung']} -> "
                   f"{rec['to_rung']}: in {rec['page_in']/1e6:.2f}MB "
@@ -252,13 +288,20 @@ def main(argv=None):
                 max_new_tokens=args.new_tokens))
             uid += 1
         t0 = time.time()
-        engine.generate(reqs, memory_budget_bytes=int(budget))
+        engine.generate(reqs, memory_budget_bytes=int(budget),
+                        speculate=spec)
         dt = time.time() - t0
         print(f"[phase {phase}] mode={store.mode} (rung {store.rung}) "
               f"{args.requests} reqs x {args.new_tokens} tokens in {dt:.2f}s; "
               f"ledger: in={store.ledger.page_in_bytes/1e6:.2f}MB "
               f"out={store.ledger.page_out_bytes/1e6:.2f}MB "
               f"switches={store.ledger.switches}")
+        if spec is not None and engine.last_profile.speculative:
+            p = engine.last_profile
+            print(f"  [speculate] {p.verify_passes} rounds, "
+                  f"acceptance={p.acceptance:.3f}, "
+                  f"draft bytes/step {p.draft_bytes/1e6:.2f}MB vs "
+                  f"verify {p.verify_bytes/1e6:.2f}MB")
     red = store.switch_reduction()
     print(f"[switching] overhead reduction vs diverse-bitwidths: {red:.1%}")
     if args.artifact and args.link_mbps:

@@ -14,6 +14,8 @@ Public surface (all pure functions, built by :func:`make_model`):
   loss_fn(params, batch)        -> scalar LM loss        (train shapes)
   prefill(params, inputs)       -> (last_logits, cache)  (prefill shapes)
   decode_step(params, inputs, cache) -> (logits, cache)  (decode shapes)
+  decode_chunk(params, inputs, cache) -> (logits, cache) (S-token verify;
+                                          None for ssm/hybrid families)
 """
 from __future__ import annotations
 
@@ -216,6 +218,29 @@ def attn_decode(x, lp, cfg, k_cache, v_cache, pos):
     return linear(o, lp["o"]["w"]), (k_cache, v_cache)
 
 
+def attn_decode_chunk(x, lp, cfg, k_cache, v_cache, pos):
+    """S-token chunked attention against cache (speculative verify).
+
+    x: (B,S,in_dim); caches: (B,Smax,Hkv,hd); pos: scalar start position.
+    Query row j sees exactly the keys at positions <= pos + j - the same
+    valid set (and the same Smax-wide masked softmax, where NEG_INF
+    underflows to an exact 0 weight) as j sequential attn_decode calls,
+    which is what makes chunked verification bit-identical to the
+    sequential decode it replaces.  Returns (out, (k_cache, v_cache))."""
+    B, S = x.shape[:2]
+    q, k, v = _qkv(x, lp, cfg)
+    positions = pos + jnp.arange(S)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                           (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                           (0, pos, 0, 0))
+    o = full_attention(q, k_cache, v_cache, causal=True, q_offset=pos)
+    o = o.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    return linear(o, lp["o"]["w"]), (k_cache, v_cache)
+
+
 # ===========================================================================
 # Transformer (dense / moe) forward
 # ===========================================================================
@@ -267,6 +292,24 @@ def transformer_decode(params, x, cfg, cache, pos):
         lp, kc, vc = xs
         a, (kc, vc) = attn_decode(norm(h, lp["attn_norm"], cfg.norm), lp, cfg,
                                   kc, vc, pos)
+        h = h + a
+        y, _ = _ffn(norm(h, lp["mlp_norm"], cfg.norm), lp, cfg, dropless=True)
+        return h + y, (kc, vc)
+
+    h, (kc, vc) = jax.lax.scan(scan_fn, x, (params["blocks"], cache["k"], cache["v"]))
+    return h, {"k": kc, "v": vc}
+
+
+def transformer_decode_chunk(params, x, cfg, cache, pos):
+    """Decode S tokens in ONE pass against the cache (x: (B,S,d)).
+
+    The verify half of self-speculative decoding: one weight-streaming
+    pass scores every drafted position, where sequential decode would
+    stream the full-bit weights S times."""
+    def scan_fn(h, xs):
+        lp, kc, vc = xs
+        a, (kc, vc) = attn_decode_chunk(norm(h, lp["attn_norm"], cfg.norm),
+                                        lp, cfg, kc, vc, pos)
         h = h + a
         y, _ = _ffn(norm(h, lp["mlp_norm"], cfg.norm), lp, cfg, dropless=True)
         return h + y, (kc, vc)
@@ -446,6 +489,9 @@ class Model(NamedTuple):
     prefill: Any
     decode_step: Any
     make_cache: Any
+    # decode S tokens in one pass against the cache (the speculative
+    # verify step); None for families without a chunked decode path
+    decode_chunk: Any = None
 
 
 def _forward_seq(params, inputs, cfg, want_cache: bool):
@@ -486,6 +532,24 @@ def make_model(cfg: ModelConfig) -> Model:
         new["pos"] = pos + 1
         return logits, new
 
+    def decode_chunk(params, inputs, cache):
+        """Decode inputs['tokens'] (B,S) in one cached pass -> (logits
+        (B,S,V), cache).  Position j's logits are bit-identical to what
+        S sequential decode_step calls would produce at that position
+        (the speculative-verify contract); cache advances by S."""
+        pos = cache["pos"]
+        h = embed_inputs(params, inputs, cfg)
+        h, new = transformer_decode_chunk(params, h, cfg, cache, pos)
+        h = norm(h, params["final_norm"], cfg.norm)
+        logits = lm_logits(params, h, cfg)
+        new["pos"] = pos + inputs["tokens"].shape[1]
+        return logits, new
+
+    # SSM/hybrid state recurrences have no cached multi-token re-score
+    # path; the speculative decoder refuses those families explicitly
+    if cfg.family not in ("dense", "moe"):
+        decode_chunk = None
+
     def make_cache(batch_size: int, max_len: int, dtype=None):
         dt = dtype or _cdtype(cfg)
         cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
@@ -508,4 +572,5 @@ def make_model(cfg: ModelConfig) -> Model:
                 cache["v"] = jnp.zeros(shp, dt)
         return cache
 
-    return Model(cfg, init, loss_fn, prefill, decode_step, make_cache)
+    return Model(cfg, init, loss_fn, prefill, decode_step, make_cache,
+                 decode_chunk)

@@ -1,9 +1,10 @@
-from .engine import EngineStats, Request, ServeEngine
+from .engine import (DecodeProfile, EngineStats, Request, ServeEngine,
+                     SpecConfig, SpeculativeDecoder)
 from .policies import (POLICIES, BudgetPolicy, DeliveryHealth,
                        FailureAwarePolicy, HysteresisPolicy,
                        LoadAdaptivePolicy, QualityFloorPolicy, ResourceSignal,
                        RungPolicy, SignalTracker, StaticRungPolicy,
-                       make_policy, simulate_policy)
+                       make_policy, resolve_draft_ok, simulate_policy)
 from .scheduler import (TRACES, LoadGenerator, RequestQueue, ScheduledRequest,
                         Scheduler, SchedulerReport, ServiceModel,
                         calibrate_qps)

@@ -22,11 +22,12 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from ..core.switching import NestQuantStore
+from ..core.switching import NestQuantStore, RungAssignment
 from ..models.model import Model, make_model
 from ..storage.artifact import ArtifactError
 from ..storage.pager import PagerError
-from .policies import BudgetPolicy, ResourceSignal, RungPolicy, SignalTracker
+from .policies import (BudgetPolicy, QualityFloorPolicy, ResourceSignal,
+                       RungPolicy, SignalTracker)
 
 # what a failed rung switch looks like to the engine: every pager-tier
 # fault (transient, corrupt, quarantine) plus artifact-tier errors from
@@ -50,6 +51,47 @@ class Request:
     out_tokens: List[int] = field(default_factory=list)
 
 
+@dataclass(frozen=True)
+class SpecConfig:
+    """Self-speculative decoding knobs (DESIGN.md Sec. 15).
+
+    ``k`` drafted tokens per round; ``draft`` picks the draft rung:
+    an int (uniform rung, clamped per-leaf to what is resident), a
+    ``{keystr: rung}`` map, a :class:`~repro.core.switching.
+    RungAssignment` (e.g. ``SearchResult.assignment_for(budget)`` - the
+    calibration-search sensitivity table as a draft model), or
+    ``'floor'`` (the :class:`~repro.serving.policies.QualityFloorPolicy`
+    in the engine's policy chain supplies per-leaf lowest-acceptable
+    rungs).  Drafts never page anything in: the draft rung reads a
+    PREFIX of the streams already resident for the verify rung."""
+    k: int = 3
+    draft: object = 0
+
+
+@dataclass(frozen=True)
+class DecodeProfile:
+    """What one ``generate`` call actually dispatched - the honest input
+    to :meth:`~repro.serving.scheduler.ServiceModel.speculative_seconds`
+    (drafts are charged at their resident-rung bytes, verifies at the
+    full residency, so the virtual-clock speedup is real arithmetic,
+    not an assumed acceptance rate)."""
+    steps: int = 0                # sequential full-residency decode steps
+    draft_steps: int = 0          # draft-rung decode steps
+    verify_passes: int = 0        # chunked verify passes
+    draft_bytes: int = 0          # resident bytes the draft rung streams
+    verify_bytes: int = 0         # resident bytes the verify pass streams
+    drafted: int = 0              # tokens drafted (real requests only)
+    accepted: int = 0             # drafted tokens accepted (real only)
+
+    @property
+    def speculative(self) -> bool:
+        return self.verify_passes > 0
+
+    @property
+    def acceptance(self) -> float:
+        return self.accepted / self.drafted if self.drafted else 0.0
+
+
 @dataclass
 class EngineStats:
     prefills: int = 0
@@ -68,6 +110,21 @@ class EngineStats:
     sched_steps: int = 0
     sched_admitted: int = 0
     sched_filler: int = 0
+    # speculative counters (DESIGN.md Sec. 15).  Token counts cover REAL
+    # requests only: filler clones ride in the same batch rows but are
+    # excluded here exactly as sched_filler excludes them from admission
+    # accounting - a padded batch must not dilute the acceptance rate.
+    spec_rounds: int = 0          # draft/verify rounds (= verify passes)
+    spec_draft_steps: int = 0     # draft-rung decode dispatches
+    spec_drafted: int = 0         # tokens drafted for real requests
+    spec_accepted: int = 0        # drafted tokens accepted (real only)
+    spec_rejected: int = 0        # drafted tokens rejected (real only)
+
+    @property
+    def spec_acceptance(self) -> float:
+        """Accepted fraction of drafted tokens (real requests only)."""
+        return (self.spec_accepted / self.spec_drafted
+                if self.spec_drafted else 0.0)
 
     def record_mode(self, mode: str):
         self.mode_history.append(mode)
@@ -89,20 +146,30 @@ class ServeEngine:
         self.artifact = None          # set by from_artifact
         self._tracker = SignalTracker()
         self._params = None
+        self.last_profile: Optional[DecodeProfile] = None
+        self._decode_chunk = None
         if compiled is not None:
-            self._prefill, self._decode = compiled
+            if len(compiled) == 3:
+                self._prefill, self._decode, self._decode_chunk = compiled
+            else:
+                self._prefill, self._decode = compiled
         else:
             self._prefill = jax.jit(self.model.prefill)
             self._decode = jax.jit(self.model.decode_step,
                                    donate_argnums=(2,))
+        if self._decode_chunk is None and self.model.decode_chunk is not None:
+            self._decode_chunk = jax.jit(self.model.decode_chunk,
+                                         donate_argnums=(2,))
 
     @property
     def compiled(self):
-        """The jitted ``(prefill, decode_step)`` pair.  A fleet of N
-        same-config replicas passes one engine's ``compiled`` (plus its
-        ``model``) to the other N-1 constructors so jax traces each
-        function once, not N times (DESIGN.md Sec. 14)."""
-        return (self._prefill, self._decode)
+        """The jitted ``(prefill, decode_step, decode_chunk)`` triple
+        (``decode_chunk`` is None for families without a chunked verify
+        path).  A fleet of N same-config replicas passes one engine's
+        ``compiled`` (plus its ``model``) to the other N-1 constructors
+        so jax traces each function once, not N times (DESIGN.md
+        Sec. 14); 2-tuples from older callers still unpack."""
+        return (self._prefill, self._decode, self._decode_chunk)
 
     # -- deployment --------------------------------------------------------
     @classmethod
@@ -164,6 +231,98 @@ class ServeEngine:
                 "page_in": self.store.ledger.page_in_bytes - in0,
                 "failed": failed}
 
+    # -- warm-up (kill the per-rung retrace, DESIGN.md Sec. 15) ------------
+    def warmup(self, prompt_len, *, batch: Optional[int] = None,
+               rungs=None, spec: Optional["SpecConfig"] = None) -> int:
+        """Pre-trace every (rung, shape) the serve loop will dispatch.
+
+        A rung switch changes the rung stamp AND the delta-residency
+        pattern of every packed leaf - both live in the pytree structure,
+        so each uniform rung is a distinct jit cache entry and the first
+        switch to it used to pay a mid-serve retrace.  This calls the
+        jitted prefill / decode(/chunk/draft) functions once per rung on
+        :meth:`~repro.core.switching.NestQuantStore.rung_view` trees
+        whose structure matches the live ``store.params()`` at that rung
+        bit-for-bit, so later switches hit the cache (``.lower().
+        compile()`` would NOT populate the call cache - the calls are
+        real, on throwaway buffers).  ``prompt_len`` is an int or a list
+        of the prompt lengths generate() will see after left-padding;
+        ``batch`` defaults to ``max_batch`` (what a bucketing Scheduler
+        dispatches); ``spec`` additionally warms the draft-stamp and
+        (k+1)-chunk verify entries.  Mixed per-leaf assignments beyond
+        the draft map are not enumerated here - a policy that emits one
+        still traces on first use.  Returns the number of warm-up calls."""
+        B = self.max_batch if batch is None else batch
+        plens = ([prompt_len] if isinstance(prompt_len, int)
+                 else sorted(set(prompt_len)))
+        rungs = (range(self.store.num_rungs) if rungs is None
+                 else sorted(set(rungs)))
+        cdt = jnp.dtype(self.cfg.compute_dtype)
+        tok1 = jnp.zeros((B, 1), jnp.int32)
+        calls = 0
+        for r in rungs:
+            stamps = [None]
+            if spec is not None:
+                draft = self._draft_rungs(spec, {p: min(r, len(s) - 1)
+                                                 for p, s in
+                                                 self.store.leaf_streams().items()})
+                stamps.append(draft)
+            params = self.store.rung_view(r)
+            for S in plens:
+                self._prefill(params, {"tokens": jnp.zeros((B, S), jnp.int32)})
+                calls += 1
+            for stamp in stamps:
+                p = params if stamp is None else self.store.rung_view(
+                    r, stamp=stamp)
+                self._decode(p, {"tokens": tok1},
+                             self.model.make_cache(B, self.max_len, dtype=cdt))
+                calls += 1
+            if spec is not None and self._decode_chunk is not None:
+                self._decode_chunk(
+                    params, {"tokens": jnp.zeros((B, spec.k + 1), jnp.int32)},
+                    self.model.make_cache(B, self.max_len, dtype=cdt))
+                calls += 1
+        return calls
+
+    # -- draft-rung selection (DESIGN.md Sec. 15) --------------------------
+    def _draft_rungs(self, spec: "SpecConfig",
+                     cur: Optional[Dict[str, int]] = None) -> Dict[str, int]:
+        """Per-leaf draft rungs for ``spec``, clamped to the CURRENT
+        residency (drafting must never page anything in - the draft
+        reads a prefix of the streams the verify rung already holds)."""
+        if cur is None:
+            cur = self.store.leaf_rungs()
+        d = spec.draft
+        if isinstance(d, str):
+            if d != "floor":
+                raise ValueError(f"unknown draft spec {d!r}; expected an "
+                                 "int rung, a path map, a RungAssignment, "
+                                 "or 'floor'")
+            pol, floors, seen = self.policy, None, set()
+            while pol is not None and id(pol) not in seen:
+                seen.add(id(pol))
+                if isinstance(pol, QualityFloorPolicy):
+                    floors = pol.floor_rungs(self.store)
+                    break
+                pol = getattr(pol, "inner", None)
+            if floors is None:
+                raise ValueError("draft='floor' needs a QualityFloorPolicy "
+                                 "in the engine's policy chain")
+            want = floors
+        elif isinstance(d, RungAssignment):
+            want = self.store.resolve_assignment(d)
+        elif isinstance(d, dict):
+            want = {p: d.get(p, 0) for p in cur}
+        else:
+            want = {p: int(d) for p in cur}
+        return {p: max(0, min(int(want[p]), cur[p])) for p in cur}
+
+    def draft_resident_bytes(self, spec: "SpecConfig") -> int:
+        """Bytes one draft-rung decode step streams (what the
+        ServiceModel charges a draft at)."""
+        return self.store.assignment_resident_bytes(RungAssignment(
+            default=0, exact=tuple(self._draft_rungs(spec).items())))
+
     # -- switching ---------------------------------------------------------
     def ensure_mode(self, memory_budget_bytes: Optional[int] = None,
                     queue_depth: int = 0, backlog_age_s: float = 0.0):
@@ -218,17 +377,36 @@ class ServeEngine:
     def generate(self, requests: List[Request],
                  memory_budget_bytes: Optional[int] = None, *,
                  queue_depth: Optional[int] = None,
-                 backlog_age_s: float = 0.0) -> List[Request]:
+                 backlog_age_s: float = 0.0,
+                 speculate=None) -> List[Request]:
         """Greedy-decode a batch of requests with the current mode.
 
         ``queue_depth``/``backlog_age_s`` let a scheduler report the
         backlog BEHIND this batch (the admission-step hook, DESIGN.md
         Sec. 11) so the policy decides once per batch from real traffic
         pressure; bare calls keep the old behavior of reporting the
-        batch size itself."""
+        batch size itself.
+
+        ``speculate`` (an int ``k`` or a :class:`SpecConfig`) switches to
+        self-speculative decoding (DESIGN.md Sec. 15): the resident
+        part-bit rung drafts k greedy tokens, ONE chunked full-residency
+        pass verifies all k+1 positions, and the longest matching prefix
+        is accepted - output token ids are bit-identical to this same
+        call without ``speculate``.  Either way ``last_profile`` records
+        what was dispatched for the virtual-clock cost model."""
         if len(requests) > self.max_batch:
             raise ValueError(f"batch of {len(requests)} exceeds "
                              f"max_batch={self.max_batch}")
+        spec = None
+        if speculate:
+            spec = (speculate if isinstance(speculate, SpecConfig)
+                    else SpecConfig(k=int(speculate)))
+            if spec.k < 1:
+                raise ValueError(f"speculate needs k >= 1, got {spec.k}")
+            if self._decode_chunk is None:
+                raise NotImplementedError(
+                    f"speculative decoding needs a chunked verify pass; "
+                    f"family {self.cfg.family!r} has none")
         self.ensure_mode(
             memory_budget_bytes,
             queue_depth=len(requests) if queue_depth is None else queue_depth,
@@ -236,6 +414,12 @@ class ServeEngine:
         params = self._params
         B = len(requests)
         S = max(len(r.prompt) for r in requests)
+        n_steps = max(r.max_new_tokens for r in requests)
+        if spec is not None and S + n_steps + spec.k > self.max_len:
+            raise ValueError(
+                f"speculative decode can write up to prompt+new+k = "
+                f"{S + n_steps + spec.k} cache positions; max_len="
+                f"{self.max_len} is too small")
         toks = np.zeros((B, S), np.int32)
         for i, r in enumerate(requests):
             toks[i, S - len(r.prompt):] = r.prompt       # left-pad
@@ -254,7 +438,10 @@ class ServeEngine:
                 full[key] = v
         cache = full
         next_tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
-        n_steps = max(r.max_new_tokens for r in requests)
+        if spec is not None:
+            SpeculativeDecoder(self, spec).decode(
+                requests, params, cache, next_tok, pos=S)
+            return requests
         for _ in range(n_steps):
             for i, r in enumerate(requests):
                 if len(r.out_tokens) < r.max_new_tokens:
@@ -262,4 +449,105 @@ class ServeEngine:
             logits, cache = self._decode(params, {"tokens": next_tok}, cache)
             self.stats.decode_steps += 1
             next_tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        self.last_profile = DecodeProfile(
+            steps=n_steps, verify_bytes=self.store.resident_bytes())
         return requests
+
+
+class SpeculativeDecoder:
+    """Draft/verify round state machine (DESIGN.md Sec. 15).
+
+    The nesting ladder makes the draft model FREE: the part-bit rung is
+    a prefix of the packed streams already resident for the full-bit
+    rung, so drafting re-reads fewer bytes of the same artifact - no
+    second model, no extra HBM, and the one shared KV cache serves both
+    phases (draft-rung K/V written at the drafted positions is always
+    overwritten by the verify chunk before any later query can attend
+    to it).
+
+    One round from cache position ``pos`` with pending token ``t``:
+
+      1. DRAFT   - k sequential decode steps with the draft-stamped
+                   params produce d_1..d_k (greedy argmax each).
+      2. VERIFY  - rewind to ``pos``; ONE chunked full-residency pass
+                   over [t, d_1..d_k] scores every position.
+      3. ACCEPT  - per row, the longest prefix of drafts matching the
+                   verify argmaxes; the BATCH accepts the minimum m over
+                   live real rows (shapes and the shared position scalar
+                   stay static), emits d_1..d_m plus the verify argmax
+                   at position m (correction or bonus token - every
+                   round advances at least one token), and resumes from
+                   ``pos + m + 1``.
+
+    Because the verify pass reproduces sequential full-bit decode
+    bit-for-bit (chunked attention sees identical masked key sets) and
+    every emitted token is a verify argmax or a draft that matched one,
+    the emitted sequence IS the full-bit greedy sequence."""
+
+    def __init__(self, engine: ServeEngine, spec: SpecConfig):
+        self.engine = engine
+        self.spec = spec
+        self.draft_rungs = engine._draft_rungs(spec)
+        self.draft_params = engine.store.params_for(self.draft_rungs)
+        self.draft_bytes = engine.store.assignment_resident_bytes(
+            RungAssignment(default=0, exact=tuple(self.draft_rungs.items())))
+
+    def decode(self, requests: List[Request], params, cache, first_tok,
+               pos: int) -> None:
+        eng, k = self.engine, self.spec.k
+        stats = eng.stats
+        verify_bytes = eng.store.resident_bytes()
+        for i, r in enumerate(requests):
+            if len(r.out_tokens) < r.max_new_tokens:
+                r.out_tokens.append(int(first_tok[i, 0]))
+        t_last = first_tok                       # emitted, not yet in cache
+        rounds = draft_steps = drafted = accepted = 0
+
+        def live(r):
+            return len(r.out_tokens) < r.max_new_tokens
+
+        while any(live(r) for r in requests):
+            # 1. draft: k greedy steps at the draft rung, shared cache
+            cur = t_last
+            drafts = []
+            for _ in range(k):
+                logits, cache = eng._decode(self.draft_params,
+                                            {"tokens": cur}, cache)
+                cur = jnp.argmax(logits[:, -1, :],
+                                 axis=-1)[:, None].astype(jnp.int32)
+                drafts.append(cur)
+            draft_steps += k
+            d = jnp.concatenate(drafts, axis=1)             # (B, k)
+            # 2. verify: ONE full-residency chunk over [t, d_1..d_k]
+            cache["pos"] = jnp.asarray(pos, jnp.int32)      # rewind
+            chunk = jnp.concatenate([t_last, d], axis=1)    # (B, k+1)
+            vlogits, cache = eng._decode_chunk(params, {"tokens": chunk},
+                                               cache)
+            rounds += 1
+            vnext = jnp.argmax(vlogits, axis=-1).astype(jnp.int32)  # (B,k+1)
+            # 3. accept the longest matching prefix (batch-min over the
+            # rows still generating; finished rows must not throttle)
+            dn, vn = np.asarray(d), np.asarray(vnext)
+            match = dn == vn[:, :k]
+            m_row = np.where(match.all(axis=1), k, match.argmin(axis=1))
+            rows = [i for i, r in enumerate(requests) if live(r)]
+            m = int(min(m_row[i] for i in rows))
+            n_real = sum(1 for i in rows if requests[i].uid >= 0)
+            drafted += k * n_real
+            accepted += m * n_real
+            for i, r in enumerate(requests):
+                for t in [*dn[i, :m], vn[i, m]]:
+                    if live(r):
+                        r.out_tokens.append(int(t))
+            t_last = vnext[:, m:m + 1]
+            pos += m + 1
+            cache["pos"] = jnp.asarray(pos, jnp.int32)
+        stats.spec_rounds += rounds
+        stats.spec_draft_steps += draft_steps
+        stats.spec_drafted += drafted
+        stats.spec_accepted += accepted
+        stats.spec_rejected += drafted - accepted
+        eng.last_profile = DecodeProfile(
+            draft_steps=draft_steps, verify_passes=rounds,
+            draft_bytes=self.draft_bytes, verify_bytes=verify_bytes,
+            drafted=drafted, accepted=accepted)

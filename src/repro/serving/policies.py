@@ -157,6 +157,18 @@ class LoadAdaptivePolicy:
             return RungAssignment.uniform(min(cur + 1, cap))
         return RungAssignment.uniform(cur)
 
+    def draft_ok(self, signal: ResourceSignal) -> bool:
+        """The drafting on/off signal (DESIGN.md Sec. 15): speculative
+        drafting spends extra dispatches per emitted token, which pays
+        off only when the queue is SHALLOW (latency-bound serving).  A
+        deep or aging backlog wants big verified batches, not drafts -
+        the same drained/pressured thresholds that drive the rung walk
+        gate the draft spend."""
+        pressured = (signal.queue_depth >= self.high_depth
+                     or (self.max_age_s is not None
+                         and signal.backlog_age_s >= self.max_age_s))
+        return not pressured and signal.queue_depth <= self.low_depth
+
 
 class HysteresisPolicy:
     """Dwell-window wrapper: after any residency change, upgrades are
@@ -316,6 +328,22 @@ class FailureAwarePolicy:
         if out == tgt:
             return want
         return RungAssignment(default=store.rung, exact=tuple(out.items()))
+
+
+def resolve_draft_ok(policy, signal: ResourceSignal) -> Optional[bool]:
+    """Walk a policy wrapper chain (``.inner`` links) for a ``draft_ok``
+    drafting signal (DESIGN.md Sec. 15).  Returns the verdict of the
+    first policy (walking outside-in) that exposes one, or None when no
+    policy in the chain does (the Scheduler then falls back to its own
+    shallow-queue check)."""
+    seen = set()
+    while policy is not None and id(policy) not in seen:
+        seen.add(id(policy))
+        fn = getattr(policy, "draft_ok", None)
+        if callable(fn):
+            return bool(fn(signal))
+        policy = getattr(policy, "inner", None)
+    return None
 
 
 POLICIES = {"budget": BudgetPolicy, "hysteresis": HysteresisPolicy,

@@ -37,7 +37,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .engine import Request, ServeEngine
+from .engine import Request, ServeEngine, SpecConfig
+from .policies import ResourceSignal, resolve_draft_ok
 
 TRACES = ("poisson", "burst", "diurnal")
 
@@ -208,6 +209,22 @@ class ServiceModel:
         return (moves * self.switch_latency_s
                 + page_bytes / (self.page_gbps * 1e9))
 
+    def speculative_seconds(self, profile) -> float:
+        """Virtual seconds for one speculatively decoded batch, from the
+        engine's :class:`~repro.serving.engine.DecodeProfile` of what was
+        ACTUALLY dispatched: every draft step streams the draft rung's
+        resident bytes, every verify pass streams the full residency
+        once (the whole point - one weight pass scores k+1 positions),
+        and sequential full-residency steps (if any) stream as usual.
+        No assumed acceptance rate anywhere: a rejected round costs its
+        full drafts, so the reported speedup is honest (DESIGN.md
+        Sec. 15)."""
+        return (self.batch_overhead_s
+                + (profile.draft_steps * profile.draft_bytes
+                   + profile.verify_passes * profile.verify_bytes
+                   + profile.steps * profile.verify_bytes)
+                / (self.weight_gbps * 1e9))
+
     def capacity_rps(self, resident_bytes: int, steps: int,
                      max_batch: int) -> float:
         """Saturation throughput (requests/s) at full batches."""
@@ -317,6 +334,27 @@ class SchedulerReport:
         stack)."""
         return sum(float(s.get("fault_s", 0.0)) for s in self.steps)
 
+    @property
+    def spec_steps(self) -> int:
+        """Batches served speculatively (DESIGN.md Sec. 15) - the rest
+        fell back to plain batched decode (deep queue or drafting off)."""
+        return sum(1 for s in self.steps if s.get("speculative"))
+
+    @property
+    def spec_drafted(self) -> int:
+        return sum(int(s.get("spec_drafted", 0)) for s in self.steps)
+
+    @property
+    def spec_accepted(self) -> int:
+        return sum(int(s.get("spec_accepted", 0)) for s in self.steps)
+
+    @property
+    def spec_acceptance(self) -> float:
+        """Accepted fraction of drafted tokens across the run (real
+        requests only; filler clones are excluded at the engine)."""
+        d = self.spec_drafted
+        return self.spec_accepted / d if d else 0.0
+
     def summary(self) -> Dict[str, object]:
         lat = self.latency("total")
         return {"trace": self.trace_kind, "requests": len(self.requests),
@@ -333,7 +371,11 @@ class SchedulerReport:
                 "page_in_mb": self.page_in_bytes / 1e6,
                 "page_out_mb": self.page_out_bytes / 1e6,
                 "switch_failures": self.switch_failures,
-                "fault_s": self.fault_s}
+                "fault_s": self.fault_s,
+                "spec_steps": self.spec_steps,
+                "spec_drafted": self.spec_drafted,
+                "spec_accepted": self.spec_accepted,
+                "spec_acceptance": self.spec_acceptance}
 
     def table(self) -> str:
         """The p95 / rung-occupancy table, print-ready."""
@@ -384,7 +426,8 @@ class Scheduler:
                  max_batch: Optional[int] = None,
                  admit_wait_s: float = 0.01,
                  memory_budget_bytes: Optional[int] = None,
-                 bucket_batches: bool = True, clock=None):
+                 bucket_batches: bool = True, clock=None,
+                 speculate=None):
         if max_batch is None:
             max_batch = engine.max_batch
         if max_batch > engine.max_batch:
@@ -403,6 +446,14 @@ class Scheduler:
         self.memory_budget_bytes = memory_budget_bytes
         self.bucket_batches = bucket_batches
         self.clock = clock
+        # speculative mode (DESIGN.md Sec. 15): an int k or a SpecConfig
+        # ARMS drafting; whether a given batch actually drafts is decided
+        # per step by the policy chain's draft_ok signal (fallback: only
+        # on an empty leftover backlog).  Deep queues keep the plain
+        # batched path - big verified batches beat drafts under load.
+        if speculate is not None and not isinstance(speculate, SpecConfig):
+            speculate = SpecConfig(k=int(speculate))
+        self.speculate = speculate
 
         self._started = False
 
@@ -522,8 +573,17 @@ class Scheduler:
         # quarantines lower it; DESIGN.md Sec. 12) - recorded so runs
         # can show rung availability through a fault window
         avail_rung = store.max_available_rung()
+        # drafting on/off (DESIGN.md Sec. 15): ask the policy chain with
+        # the same backlog signal it will see; shallow queue -> draft
+        spec = None
+        if self.speculate is not None:
+            ok = resolve_draft_ok(eng.policy, ResourceSignal(
+                queue_depth=depth, backlog_age_s=age))
+            if ok if ok is not None else depth == 0:
+                spec = self.speculate
         eng.generate(reqs, self.memory_budget_bytes,
-                     queue_depth=depth, backlog_age_s=age)
+                     queue_depth=depth, backlog_age_s=age, speculate=spec)
+        profile = eng.last_profile
         if self.clock is not None:
             fault_s = self.clock.now() - t0
         failed = eng.stats.switch_failures - failures0
@@ -549,9 +609,14 @@ class Scheduler:
         # -- advance the virtual clock -------------------------------------
         switch_s = self.service.switch_seconds(page_in + page_out,
                                                len(moved)) + fault_s
-        batch_s = self.service.batch_seconds(
-            store.resident_bytes(),
-            max(s.request.max_new_tokens for s in batch))
+        if spec is not None and profile is not None and profile.speculative:
+            # charge what was ACTUALLY dispatched: k draft steps at the
+            # draft rung's bytes + one full-residency pass per verify
+            batch_s = self.service.speculative_seconds(profile)
+        else:
+            batch_s = self.service.batch_seconds(
+                store.resident_bytes(),
+                max(s.request.max_new_tokens for s in batch))
         now += switch_s + batch_s
         for s in batch:
             s.done_s = now
@@ -561,6 +626,8 @@ class Scheduler:
         eng.stats.sched_steps += 1
         eng.stats.sched_admitted += len(batch)
         eng.stats.sched_filler += n_filler
+        speculative = bool(spec is not None and profile is not None
+                           and profile.speculative)
         rec = {"step": len(self._steps), "admit_s": batch[0].admit_s,
                "done_s": now, "batch": len(batch),
                "filler": n_filler, "queue_depth": depth,
@@ -569,7 +636,11 @@ class Scheduler:
                "page_out": page_out, "switch_s": switch_s,
                "batch_s": batch_s, "fault_s": fault_s,
                "switch_failures": failed,
-               "avail_rung": avail_rung, "clock_s": t0}
+               "avail_rung": avail_rung, "clock_s": t0,
+               "speculative": speculative,
+               "spec_drafted": profile.drafted if speculative else 0,
+               "spec_accepted": profile.accepted if speculative else 0,
+               "spec_rounds": profile.verify_passes if speculative else 0}
         self._steps.append(rec)
         self._now = now
         return rec

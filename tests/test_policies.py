@@ -281,3 +281,24 @@ def test_mode_history_is_bounded():
         stats.record_mode("part" if i % 2 else "full")
     assert len(stats.mode_history) == MODE_HISTORY_CAP
     assert sum(stats.mode_counts.values()) == MODE_HISTORY_CAP + 100
+
+
+def test_draft_ok_gates_on_backlog():
+    """Drafting is a latency optimization: on only when the queue is
+    drained, off under pressure (DESIGN.md Sec. 15)."""
+    from repro.serving.policies import (HysteresisPolicy, LoadAdaptivePolicy,
+                                        ResourceSignal, StaticRungPolicy,
+                                        resolve_draft_ok)
+    pol = LoadAdaptivePolicy(high_depth=8, low_depth=0, max_age_s=2.0)
+    assert pol.draft_ok(ResourceSignal(queue_depth=0))
+    assert not pol.draft_ok(ResourceSignal(queue_depth=1))      # not drained
+    assert not pol.draft_ok(ResourceSignal(queue_depth=9))      # pressured
+    assert not pol.draft_ok(ResourceSignal(queue_depth=0,
+                                           backlog_age_s=3.0))  # aged
+    # resolve walks wrapper chains (hysteresis etc.) to the verdict...
+    wrapped = HysteresisPolicy(LoadAdaptivePolicy(high_depth=4), dwell=2)
+    assert resolve_draft_ok(wrapped, ResourceSignal(queue_depth=0)) is True
+    assert resolve_draft_ok(wrapped, ResourceSignal(queue_depth=5)) is False
+    # ...and reports "no opinion" when nothing in the chain has one
+    assert resolve_draft_ok(StaticRungPolicy(0),
+                            ResourceSignal(queue_depth=0)) is None

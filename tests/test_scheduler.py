@@ -254,3 +254,45 @@ def test_load_adaptive_validation_and_service_model(small_store):
     slow = svc.batch_seconds(10 ** 6, 4)
     assert slow > svc.batch_seconds(10 ** 5, 4)   # fewer bytes serve faster
     assert svc.capacity_rps(10 ** 6, 4, 8) == pytest.approx(8 / slow)
+
+
+def test_scheduler_speculative_gating_and_accounting(setup):
+    """An armed scheduler drafts only when the policy chain says the
+    queue is shallow; speculative steps are charged by DecodeProfile
+    (actual dispatches) and the report ledger balances."""
+    from repro.serving import SpecConfig
+    from repro.serving.policies import StaticRungPolicy
+    cfg, nested = setup
+    store = NestQuantStore(nested, mode="full", dtype=jnp.float32)
+    eng = ServeEngine(cfg, store, max_batch=4, max_len=48,
+                      policy=StaticRungPolicy(-1))
+    svc = ServiceModel()
+    trace = _make_trace(store, svc, kind="poisson", n=24)
+    sched = Scheduler(eng, trace, svc, max_batch=4,
+                      speculate=SpecConfig(k=2, draft=0))
+    rep = sched.run()
+    assert all(len(r.request.out_tokens) == trace.new_tokens
+               for r in rep.requests)
+    spec_steps = [s for s in rep.steps if s["speculative"]]
+    plain_steps = [s for s in rep.steps if not s["speculative"]]
+    assert spec_steps, "shallow steady trace never drafted"
+    # fallback gate (StaticRungPolicy has no draft_ok): draft iff the
+    # leftover backlog is empty
+    for s in rep.steps:
+        assert s["speculative"] == (s["queue_depth"] == 0), s
+    for s in plain_steps:
+        assert s["spec_drafted"] == s["spec_accepted"] == 0
+    assert rep.spec_steps == len(spec_steps)
+    assert rep.spec_drafted >= rep.spec_accepted > 0
+    assert 0.0 < rep.spec_acceptance <= 1.0
+    assert rep.summary()["spec_steps"] == len(spec_steps)
+    # a speculative batch is charged EXACTLY what it dispatched: k drafts
+    # per round at the draft rung's bytes + one full pass per round
+    d0 = eng.draft_resident_bytes(SpecConfig(k=2, draft=0))
+    f0 = store.resident_bytes()
+    for s in spec_steps:
+        rounds = s["spec_rounds"]
+        assert rounds > 0
+        want = svc.batch_overhead_s + (rounds * (2 * d0 + f0)
+                                       / (svc.weight_gbps * 1e9))
+        assert s["batch_s"] == pytest.approx(want), (s, want)

@@ -105,3 +105,50 @@ def test_ensure_mode_counts_only_real_switches(engine):
     assert eng.stats.switches == 1
     eng.ensure_mode(None)                   # part -> full
     assert eng.stats.switches == 2
+
+
+def test_warmup_kills_rung_switch_retrace():
+    """warmup() pre-traces every (rung, shape) dispatch the serve loop
+    can hit - residency pattern AND rung stamp both live in the pytree
+    structure, so each is its own jit cache entry.  After warmup, a
+    switch to a NEVER-BEFORE-SERVED rung (plain or speculative) must
+    trigger ZERO new compilations (DESIGN.md Sec. 15)."""
+    from repro.core.recipe import QuantRecipe, quantize
+    from repro.serving import SpecConfig
+    from repro.serving.policies import StaticRungPolicy
+
+    cfg = get_config("qwen2-1.5b").reduced()
+    model = make_model(cfg)
+    traces = {"prefill": 0, "decode": 0, "chunk": 0}
+
+    def counting(fn, key):
+        def inner(*a, **kw):            # body runs once per jax TRACE
+            traces[key] += 1
+            return fn(*a, **kw)
+        return inner
+
+    counted = model._replace(
+        prefill=counting(model.prefill, "prefill"),
+        decode_step=counting(model.decode_step, "decode"),
+        decode_chunk=counting(model.decode_chunk, "chunk"))
+    compiled = (jax.jit(counted.prefill),
+                jax.jit(counted.decode_step, donate_argnums=(2,)),
+                jax.jit(counted.decode_chunk, donate_argnums=(2,)))
+    params = model.init(jax.random.PRNGKey(0))
+    nested = quantize(params, QuantRecipe(bits=(8, 6, 4)))
+    store = NestQuantStore(nested, mode="part", dtype=jnp.float32)
+    eng = ServeEngine(cfg, store, max_batch=2, max_len=48,
+                      policy=StaticRungPolicy(0), model=counted,
+                      compiled=compiled)
+    spec = SpecConfig(k=3, draft=0)
+    eng.warmup(6, batch=2, spec=spec)
+    assert sum(traces.values()) > 0
+    snap = dict(traces)
+    # rungs 1 and 2 (and the draft stamp, and the verify chunk) have
+    # never been SERVED - only warmed.  No dispatch may retrace.
+    for rung in (1, 2, 0):
+        eng.policy = StaticRungPolicy(rung)
+        eng.generate(_reqs(cfg, 2, seed=20 + rung, new_tokens=4),
+                     speculate=spec)
+        eng.generate(_reqs(cfg, 2, seed=30 + rung, new_tokens=4))
+    assert traces == snap, f"retraced after warmup: was {snap}, now {traces}"

@@ -1,0 +1,200 @@
+"""Self-speculative ladder decoding tests (DESIGN.md Sec. 15).
+
+The load-bearing claim is EXACT greedy equivalence: whatever the draft
+rung proposes, the emitted token ids are bit-identical to the plain
+full-residency greedy decode of the same requests.  Everything else -
+acceptance accounting, filler exclusion, draft-rung resolution, the
+honest DecodeProfile - is pinned around that invariant.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.api import (DecodeProfile, QuantRecipe, NestQuantStore, Request,
+                       RungAssignment, ServeEngine, ServiceModel, SpecConfig,
+                       StaticRungPolicy, quantize)
+from repro.configs import ARCHS, get_config
+from repro.models import make_model
+
+CFG = get_config("qwen2-1.5b").reduced()
+MODEL = make_model(CFG)
+PARAMS = MODEL.init(jax.random.PRNGKey(0))
+
+
+def _engine(bits, max_batch=2, max_len=48):
+    nested = quantize(PARAMS, QuantRecipe(bits=bits))
+    store = NestQuantStore(nested, mode="full", dtype=jnp.float32)
+    return ServeEngine(CFG, store, max_batch=max_batch, max_len=max_len,
+                       policy=StaticRungPolicy(-1))
+
+
+def _reqs(n, seed=0, plen=6, new_tokens=8):
+    rng = np.random.default_rng(seed)
+    return [Request(i, rng.integers(0, CFG.vocab_size, plen).astype(np.int32),
+                    max_new_tokens=new_tokens) for i in range(n)]
+
+
+@pytest.fixture(scope="module", params=[(8, 4), (8, 6, 4)],
+                ids=["bits8-4", "bits8-6-4"])
+def ladder(request):
+    return request.param, _engine(request.param)
+
+
+# -- exact greedy equivalence (the tentpole invariant) ----------------------
+def test_spec_bit_identical_sweep(ladder):
+    """Every (seed, draft rung) combination emits EXACTLY the sequence
+    plain full-bit greedy decode emits - speculation is a pure latency
+    optimization, never a quality knob."""
+    bits, eng = ladder
+    for seed in (0, 1, 2):
+        base = [r.out_tokens for r in eng.generate(_reqs(2, seed=seed))]
+        for draft in range(len(bits) - 1):
+            out = [r.out_tokens for r in
+                   eng.generate(_reqs(2, seed=seed),
+                                speculate=SpecConfig(k=3, draft=draft))]
+            assert out == base, (bits, seed, draft)
+            assert eng.last_profile.speculative
+
+
+def test_spec_acceptance_bounds_and_counters(ladder):
+    """Acceptance lands in (0, 1]; drafting at the TOP rung (draft ==
+    verify params) accepts everything; the stats ledger balances."""
+    bits, eng = ladder
+    s0 = dataclasses.replace(eng.stats)
+    eng.generate(_reqs(2, seed=3), speculate=SpecConfig(k=3, draft=0))
+    p = eng.last_profile
+    assert 0.0 < p.acceptance <= 1.0
+    assert p.drafted == 3 * p.verify_passes * 2          # k * rounds * B
+    assert p.draft_steps == 3 * p.verify_passes
+    d_stats = eng.stats.spec_drafted - s0.spec_drafted
+    a_stats = eng.stats.spec_accepted - s0.spec_accepted
+    r_stats = eng.stats.spec_rejected - s0.spec_rejected
+    assert (d_stats, a_stats) == (p.drafted, p.accepted)
+    assert r_stats == d_stats - a_stats
+    # the top rung drafting for itself must agree with itself exactly
+    eng.generate(_reqs(2, seed=3),
+                 speculate=SpecConfig(k=3, draft=len(bits) - 1))
+    assert eng.last_profile.acceptance == 1.0
+
+
+def test_spec_corrupted_draft_still_exact(monkeypatch):
+    """A garbage draft model (different random init) tanks acceptance to
+    noise level but CANNOT corrupt the output - every emitted token is
+    still a full-bit verify argmax."""
+    from repro.serving import engine as eng_mod
+    eng = _engine((8, 4))
+    base = [r.out_tokens for r in eng.generate(_reqs(2, seed=4))]
+    other = quantize(MODEL.init(jax.random.PRNGKey(99)),
+                     QuantRecipe(bits=(8, 4)))
+    bad = NestQuantStore(other, mode="full", dtype=jnp.float32).params_for(0)
+    orig = eng_mod.SpeculativeDecoder.__init__
+
+    def corrupted(self, engine, spec):
+        orig(self, engine, spec)
+        self.draft_params = bad
+    monkeypatch.setattr(eng_mod.SpeculativeDecoder, "__init__", corrupted)
+    out = [r.out_tokens for r in
+           eng.generate(_reqs(2, seed=4), speculate=SpecConfig(k=3, draft=0))]
+    assert out == base
+    # unrelated greedy chains agree ~1/vocab of the time; leave headroom
+    assert eng.last_profile.acceptance < 0.15
+
+
+def test_spec_filler_rows_excluded():
+    """Scheduler filler clones (uid < 0) ride in the batch rows but are
+    invisible to the acceptance ledger, mirroring sched_filler."""
+    eng = _engine((8, 4))
+    real = _reqs(1, seed=5)
+    filler = Request(-1, real[0].prompt.copy(),
+                     max_new_tokens=real[0].max_new_tokens)
+    eng.generate(real + [filler], speculate=SpecConfig(k=3, draft=0))
+    p = eng.last_profile
+    assert p.drafted == 3 * p.verify_passes          # ONE real row, not two
+    assert eng.stats.spec_drafted == p.drafted
+    assert len(filler.out_tokens) == filler.max_new_tokens  # still served
+
+
+# -- draft-rung resolution ---------------------------------------------------
+def test_spec_draft_resolution_and_clamping():
+    eng = _engine((8, 6, 4))
+    paths = list(eng.store.leaf_streams())
+    # int / map / RungAssignment forms resolve per leaf
+    assert set(eng._draft_rungs(SpecConfig(draft=1)).values()) == {1}
+    m = eng._draft_rungs(SpecConfig(draft={paths[0]: 1}))
+    assert m[paths[0]] == 1 and all(m[p] == 0 for p in paths[1:])
+    ra = RungAssignment(default=0, exact=((paths[0], 2),))
+    assert eng._draft_rungs(SpecConfig(draft=ra))[paths[0]] == 2
+    # clamped to residency: at mode='part' only rung 0 is resident
+    eng.store.to_rung(0)
+    assert set(eng._draft_rungs(SpecConfig(draft=2)).values()) == {0}
+    # draft bytes are the rung-0 residency when everything drafts at 0
+    assert (eng.draft_resident_bytes(SpecConfig(draft=0))
+            == eng.store.rung_resident_bytes(0))
+    with pytest.raises(ValueError, match="unknown draft spec"):
+        eng._draft_rungs(SpecConfig(draft="bogus"))
+    with pytest.raises(ValueError, match="QualityFloorPolicy"):
+        eng._draft_rungs(SpecConfig(draft="floor"))
+
+
+def test_spec_floor_draft_uses_quality_floor_policy():
+    from repro.api import QualityFloorPolicy
+    nested = quantize(PARAMS, QuantRecipe(bits=(8, 6, 4)))
+    store = NestQuantStore(nested, mode="full", dtype=jnp.float32)
+    eng = ServeEngine(CFG, store, max_batch=2, max_len=48,
+                      policy=QualityFloorPolicy(StaticRungPolicy(-1),
+                                                floor=30.0))
+    rungs = eng._draft_rungs(SpecConfig(draft="floor"))
+    assert rungs == eng.policy.floor_rungs(store)
+    out = [r.out_tokens for r in
+           eng.generate(_reqs(2, seed=6),
+                        speculate=SpecConfig(k=2, draft="floor"))]
+    assert out == [r.out_tokens for r in eng.generate(_reqs(2, seed=6))]
+
+
+# -- guards ------------------------------------------------------------------
+def test_spec_guards():
+    eng = _engine((8, 4), max_len=16)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.generate(_reqs(1, plen=6, new_tokens=8),
+                     speculate=SpecConfig(k=3))
+    with pytest.raises(ValueError, match="k >= 1"):
+        eng.generate(_reqs(1, new_tokens=2), speculate=SpecConfig(k=0))
+
+
+def test_spec_needs_chunked_verify_path():
+    """Families without a chunked decode (ssm/hybrid recurrence carries
+    state, not a rewindable KV cache) refuse speculation loudly."""
+    ssm = [n for n, c in ARCHS.items() if c.family not in ("dense", "moe")]
+    if not ssm:
+        pytest.skip("no non-dense family registered")
+    cfg = get_config(ssm[0]).reduced()
+    model = make_model(cfg)
+    assert model.decode_chunk is None
+    nested = quantize(model.init(jax.random.PRNGKey(0)),
+                      QuantRecipe(bits=(8, 4)))
+    store = NestQuantStore(nested, mode="full", dtype=jnp.float32)
+    eng = ServeEngine(cfg, store, max_batch=1, max_len=32,
+                      policy=StaticRungPolicy(-1))
+    rng = np.random.default_rng(0)
+    req = Request(0, rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                  max_new_tokens=2)
+    with pytest.raises(NotImplementedError, match="chunked verify"):
+        eng.generate([req], speculate=2)
+
+
+# -- honest virtual-clock accounting ----------------------------------------
+def test_speculative_seconds_charges_actual_dispatches():
+    svc = ServiceModel(weight_gbps=1.0, batch_overhead_s=0.0)
+    p = DecodeProfile(draft_steps=6, verify_passes=2,
+                      draft_bytes=100, verify_bytes=300,
+                      drafted=12, accepted=9)
+    assert svc.speculative_seconds(p) == (6 * 100 + 2 * 300) / 1e9
+    assert p.acceptance == 0.75
+    # non-speculative profile degenerates to the plain decode charge
+    plain = DecodeProfile(steps=4, verify_bytes=300)
+    assert not plain.speculative
+    assert (svc.speculative_seconds(plain)
+            == svc.batch_seconds(300, 4))
