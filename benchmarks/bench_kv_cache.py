@@ -1,0 +1,249 @@
+"""Nested KV cache benchmark (DESIGN.md Sec. 16).
+
+The cache-side half of the paper's nesting pitch: quantize K/V pages
+with the SAME ladder decomposition as the weights, keep only a rung
+prefix resident, and let the scheduler trade a KV downshift for a
+strictly larger admitted batch at a fixed HBM budget.  Everything
+downstream of the seed is deterministic (virtual clock, seeded trace,
+byte-exact paging), so the numbers reproduce on any machine.
+
+Asserted, not just reported:
+  * kernel parity - the Pallas int32 QK^T kernel (interpret mode off
+    TPU) is BIT-EXACT against the jnp reference at every rung, and the
+    full nested attention op lands within pinned relative error of the
+    dense f32 oracle, the error SHRINKING as rungs are added;
+  * rung-top fidelity - a rendered rung-top cache matches the dense
+    slab within a pinned tolerance, and rung-top decode emits the same
+    tokens as the dense-cache baseline;
+  * admission - at the same HBM budget the nested cache admits a
+    STRICTLY larger batch than the dense bf16 cache once the cache
+    rung steps down (the LoadAdaptivePolicy.kv_decide trade);
+  * under a burst trace with honest cache-byte accounting on BOTH
+    sides (kv_aware scheduling), the nested-cache run cuts p95 latency
+    vs the dense-cache run;
+  * every KV rung switch the schedule made is ledgered byte-exactly:
+    observed page bytes == metadata-computed bytes(delta_k), per event.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import (HysteresisPolicy, KVCacheConfig, LoadAdaptivePolicy,
+                       LoadGenerator, NestQuantStore, NestedKVCache,
+                       QuantRecipe, Request, Scheduler, ServeEngine,
+                       ServiceModel, quantize)
+from repro.configs import ARCHS
+from repro.core import packing
+from repro.core.decompose import chain_decompose, int_range
+from repro.kernels.nested_attention import nested_attention, ref
+from repro.kernels.nested_attention.kernel import nested_qk
+
+from .common import emit
+
+ARCH = "qwen2-1.5b"
+WEIGHT_BITS = (8, 4)
+KV_BITS = (4, 8)
+PAGE = 4
+PROMPT_LEN = 8
+N_REQUESTS = 300
+MAX_BATCH = 8
+NEW_TOKENS = 2
+SEED = 0
+
+# dense-oracle relative error per resident rung for the 3-rung parity
+# ladder below (measured ~0.12 / 0.024 / 0.006): the pin is ~1.6x the
+# observed point so a regression fails loudly while seeds stay free
+PARITY_BITS = (4, 6, 8)
+PARITY_TOL = {0: 0.2, 1: 0.05, 2: 0.02}
+RENDER_TOP_TOL = 0.02            # rendered rung-top KV vs dense slab
+
+
+def _quantize_slab(x, bits, page):
+    """(BH, S, D) dense -> (packed stream tuple, (BH, S, 1) scale), the
+    kernel-facing layout (pages along axis 1)."""
+    lo, hi = int_range(bits[-1])
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / hi
+    codes = jnp.clip(jnp.round(x / scale), lo, hi).astype(jnp.int32)
+    base, deltas = chain_decompose(codes, bits, "rtn")
+    widths = (bits[0],) + tuple(b2 - b1 + 1
+                                for b1, b2 in zip(bits, bits[1:]))
+    streams = tuple(packing.pack_blocked(c, w, page, axis=1)
+                    for c, w in zip((base, *deltas), widths))
+    return streams, scale
+
+
+def _parity():
+    """Kernel vs reference vs dense oracle at every rung."""
+    key = jax.random.PRNGKey(SEED)
+    kq, kk, kv_ = jax.random.split(key, 3)
+    BH, M, S, D = 4, 8, 32, 16
+    q = jax.random.normal(kq, (BH, M, D), jnp.float32)
+    k = jax.random.normal(kk, (BH, S, D), jnp.float32)
+    v = jax.random.normal(kv_, (BH, S, D), jnp.float32)
+    k_streams, k_scale = _quantize_slab(k, PARITY_BITS, PAGE)
+    v_streams, v_scale = _quantize_slab(v, PARITY_BITS, PAGE)
+    dense = ref.dense_attention_ref(q, k, v)
+
+    from repro.kernels.nested_attention.ops import quantize_q
+    qc, _ = quantize_q(q, PARITY_BITS[-1])
+    prev = None
+    for rung in range(len(PARITY_BITS)):
+        res = PARITY_BITS[:1 + rung]
+        ks = k_streams[:1 + rung]
+        raw_kernel = nested_qk(qc, ks, bits=res, page=PAGE, interpret=True)
+        raw_ref = ref.nested_qk_ref(qc, ks, bits=res, page=PAGE)
+        exact = bool(jnp.array_equal(raw_kernel, raw_ref))
+        out = nested_attention(q, ks, k_scale, v_streams[:1 + rung],
+                               v_scale, bits=PARITY_BITS, page=PAGE,
+                               rung=rung, interpret=True)
+        relerr = float(jnp.linalg.norm(out - dense)
+                       / jnp.linalg.norm(dense))
+        emit(f"kv_parity_rung{rung}", 0.0,
+             f"kernel_vs_ref_exact={exact};dense_relerr={relerr:.4f};"
+             f"tol={PARITY_TOL[rung]};resident_bits={list(res)}")
+        assert exact, f"kernel != ref at rung {rung}"
+        assert relerr < PARITY_TOL[rung], (rung, relerr)
+        if prev is not None:
+            assert relerr < prev, "more resident rungs must not hurt"
+        prev = relerr
+
+
+def _render_fidelity():
+    """Rendered rung-top cache vs the dense slab it ingested."""
+    kvc = NestedKVCache(KVCacheConfig(bits=KV_BITS, page=PAGE))
+    key = jax.random.PRNGKey(SEED + 1)
+    L, B, S, H, D = 2, 2, 16, 2, 16
+    k = jax.random.normal(key, (L, B, S, H, D), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 1), k.shape, jnp.float32)
+    n = kvc.ingest(k, v)
+    assert n == S // PAGE
+    kr, vr = kvc.render()
+    rel = float(jnp.linalg.norm(kr - k) / jnp.linalg.norm(k))
+    emit("kv_render_top_relerr", 0.0,
+         f"relerr={rel:.5f};tol={RENDER_TOP_TOL};bits={list(KV_BITS)}")
+    assert rel < RENDER_TOP_TOL, rel
+    # rung 0 renders strictly coarser - the nesting is real
+    kvc.to_rung(0)
+    kr0, _ = kvc.render()
+    rel0 = float(jnp.linalg.norm(kr0 - k) / jnp.linalg.norm(k))
+    emit("kv_render_rung0_relerr", 0.0, f"relerr={rel0:.5f}")
+    assert rel0 > rel
+
+
+def run():
+    cfg = ARCHS[ARCH].reduced()
+    from repro.models import make_model
+    params = make_model(cfg).init(jax.random.PRNGKey(0))
+    nested = quantize(params, QuantRecipe(bits=WEIGHT_BITS))
+    svc = ServiceModel()
+
+    _parity()
+    _render_fidelity()
+
+    # -- rung-top decode vs the dense-cache baseline ------------------------
+    reqs = [Request(i, np.arange(1 + i, 1 + i + PROMPT_LEN,
+                                 dtype=np.int32) % cfg.vocab_size, 4)
+            for i in range(4)]
+
+    def decode(kv):
+        store = NestQuantStore(nested, mode="full", dtype=jnp.float32)
+        eng = ServeEngine(cfg, store, max_batch=4, max_len=32, kv=kv)
+        out = eng.generate([Request(r.uid, r.prompt, r.max_new_tokens)
+                            for r in reqs], None)
+        return [list(r.out_tokens) for r in out]
+
+    base = decode(None)
+    top = decode(NestedKVCache(KVCacheConfig(bits=KV_BITS, page=PAGE)))
+    agree = np.mean([a == b for a, b in zip(base, top)])
+    emit("kv_top_decode_vs_dense", 0.0,
+         f"seq_agreement={agree:.3f};sequences={len(base)}")
+    assert agree == 1.0, (base, top)
+
+    # -- admission at a fixed HBM budget ------------------------------------
+    store = NestQuantStore(nested, mode="full", dtype=jnp.float32)
+    dense_eng = ServeEngine(cfg, store, max_batch=MAX_BATCH, max_len=32)
+    dense_per = dense_eng.kv_bytes_per_seq()
+    budget = store.resident_bytes() + dense_per * (MAX_BATCH // 2)
+    kvc = NestedKVCache(KVCacheConfig(bits=KV_BITS, page=PAGE))
+    nest_eng = ServeEngine(cfg, store, max_batch=MAX_BATCH, max_len=32,
+                           kv=kvc)
+    dense_adm = dense_eng.kv_admissible_batch(budget)
+    top_adm = nest_eng.kv_admissible_batch(budget)
+    kvc.to_rung(0)                      # the downshift the policy trades
+    down_adm = nest_eng.kv_admissible_batch(budget)
+    emit("kv_admitted_batch", 0.0,
+         f"budget_mb={budget / 1e6:.2f};dense={dense_adm};"
+         f"nested_top={top_adm};nested_rung0={down_adm};"
+         f"dense_bytes_per_seq={dense_per};"
+         f"rung0_bytes_per_seq={nest_eng.kv_bytes_per_seq()}")
+    assert top_adm >= dense_adm
+    assert down_adm > dense_adm, (down_adm, dense_adm)
+
+    # -- burst trace, honest cache accounting on BOTH sides -----------------
+    caps = [svc.capacity_rps(store.rung_resident_bytes(r), NEW_TOKENS,
+                             MAX_BATCH) for r in range(store.num_rungs)]
+    qps = 0.4 * caps[-1]
+    burst_qps = 1.05 * caps[0]
+
+    def schedule(kv):
+        st = NestQuantStore(nested, mode="full", dtype=jnp.float32)
+        eng = ServeEngine(
+            cfg, st, max_batch=MAX_BATCH, max_len=32,
+            policy=HysteresisPolicy(LoadAdaptivePolicy(high_depth=MAX_BATCH),
+                                    dwell=2),
+            kv=kv)
+        trace = LoadGenerator("burst", qps=qps, n_requests=N_REQUESTS,
+                              vocab_size=cfg.vocab_size, seed=SEED,
+                              new_tokens=NEW_TOKENS, prompt_len=PROMPT_LEN,
+                              burst_qps=burst_qps, burst_window=(0.25, 0.7))
+        bud = st.resident_bytes() + dense_per * (MAX_BATCH // 2)
+        rep = Scheduler(eng, trace, svc, kv_aware=True,
+                        memory_budget_bytes=bud).run()
+        assert len(rep.requests) == N_REQUESTS
+        return eng, rep
+
+    _, dense_rep = schedule(None)
+    nest_kv = NestedKVCache(KVCacheConfig(bits=KV_BITS, page=PAGE))
+    _, nest_rep = schedule(nest_kv)
+    d, n = dense_rep.summary(), nest_rep.summary()
+    d_max = max(s["batch"] - s["filler"] for s in dense_rep.steps)
+    n_max = max(s["batch"] - s["filler"] for s in nest_rep.steps)
+    emit("kv_burst_dense", 0.0,
+         f"p50_ms={d['p50_ms']:.3f};p95_ms={d['p95_ms']:.3f};"
+         f"max_admitted={d_max};steps={len(dense_rep.steps)}")
+    emit("kv_burst_nested", 0.0,
+         f"p50_ms={n['p50_ms']:.3f};p95_ms={n['p95_ms']:.3f};"
+         f"max_admitted={n_max};steps={len(nest_rep.steps)};"
+         f"kv_switches={len(nest_rep.kv_switch_records)};"
+         f"kv_rungs=" + "|".join(str(s["kv_rung"]) for s in nest_rep.steps))
+    # the headline: same HBM, strictly larger admitted batch, better p95
+    assert n_max > d_max, (n_max, d_max)
+    cut = 1.0 - n["p95_ms"] / d["p95_ms"]
+    emit("kv_burst_p95_cut", 0.0,
+         f"p95_cut={cut:.3f};dense_p95_ms={d['p95_ms']:.3f};"
+         f"nested_p95_ms={n['p95_ms']:.3f}")
+    assert n["p95_ms"] < d["p95_ms"], (n["p95_ms"], d["p95_ms"])
+
+    # -- every scheduled KV switch is ledgered byte-exactly -----------------
+    recs = nest_rep.kv_switch_records
+    assert recs, "burst run made no KV switches"
+    downs = [r for r in recs if r["to_rung"] < r["from_rung"]]
+    assert downs, "burst run never downshifted the cache"
+    for r in recs:
+        assert r["page_in"] == r["expected_in"], r
+        assert r["page_out"] == r["expected_out"], r
+        assert abs(r["from_rung"] - r["to_rung"]) == 1, r
+    total_in = sum(r["page_in"] for r in recs)
+    total_out = sum(r["page_out"] for r in recs)
+    emit("kv_switch_exactness", 0.0,
+         f"events={len(recs)};downshifts={len(downs)};"
+         f"page_in={total_in};page_out={total_out};exact=True")
+    assert nest_kv.ledger.page_in_bytes == total_in
+    assert nest_kv.ledger.page_out_bytes == total_out
+
+
+if __name__ == "__main__":
+    run()

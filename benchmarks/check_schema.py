@@ -50,6 +50,14 @@ REQUIRED_ROWS = {
         r"spec_burst_gating",
         r"spec_zero_retrace",
     ),
+    "BENCH_kv_cache.json": (
+        r"kv_parity_rung[0-9]+",
+        r"kv_render_top_relerr",
+        r"kv_top_decode_vs_dense",
+        r"kv_admitted_batch",
+        r"kv_burst_p95_cut",
+        r"kv_switch_exactness",
+    ),
     "BENCH_fleet.json": (
         r"fleet_scaling_N1\b",
         r"fleet_scaling_N4\b",

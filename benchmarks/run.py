@@ -23,9 +23,10 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_chaos, bench_cliff, bench_fleet, bench_kernels,
-                   bench_nesting_quality, bench_numerical_errors,
-                   bench_serving, bench_similarity, bench_speculative,
-                   bench_storage, bench_switching, bench_transport, roofline)
+                   bench_kv_cache, bench_nesting_quality,
+                   bench_numerical_errors, bench_serving, bench_similarity,
+                   bench_speculative, bench_storage, bench_switching,
+                   bench_transport, roofline)
     suites = [
         ("table7_numerical_errors", bench_numerical_errors.run),
         ("table4_5_similarity", bench_similarity.run),
@@ -36,6 +37,7 @@ def main() -> None:
         ("transport", bench_transport.run),
         ("serving", bench_serving.run),
         ("speculative", bench_speculative.run),
+        ("kv_cache", bench_kv_cache.run),
         ("chaos", bench_chaos.run),
         ("fleet", bench_fleet.run),
         ("kernels", bench_kernels.run),

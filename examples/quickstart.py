@@ -1,6 +1,7 @@
-"""Quickstart: NestQuant a model in eleven steps - quantize, inspect,
+"""Quickstart: NestQuant a model in twelve steps - quantize, inspect,
 serve, switch, ladder, recipe, deploy, schedule under load, scale out
-to a fleet, and decode speculatively off the ladder's own rungs.
+to a fleet, decode speculatively off the ladder's own rungs, and nest
+the KV cache itself.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -190,6 +191,32 @@ def main():
           f"(acceptance {p.acceptance:.2f}, draft bytes/step "
           f"{p.draft_bytes/p.verify_bytes:.2f}x verify) - "
           f"output bit-identical to full-bit greedy")
+
+    # 12. nested KV cache (DESIGN.md Sec. 16): the ladder applies to
+    # the cache too - prefill K/V quantized into pages whose delta
+    # streams downshift through the pager, every switch ledgered
+    # byte-exact.  A cache downshift shrinks the PER-SEQUENCE cost, so
+    # the same HBM budget admits strictly more sequences.
+    from repro.api import KVCacheConfig, NestedKVCache
+    kv = NestedKVCache(KVCacheConfig(bits=(4, 8), page=2))
+    kv_engine = ServeEngine(cfg, store11, max_batch=2, max_len=32,
+                            policy=StaticRungPolicy(-1), kv=kv)
+    kv_engine.warmup(6)                # + the KV quantize/render entries
+    rng = np.random.default_rng(12)
+    kv_engine.generate([Request(i, rng.integers(0, cfg.vocab_size, 6)
+                                .astype(np.int32), max_new_tokens=4)
+                        for i in range(2)])
+    hi = kv_engine.kv_bytes_per_seq()
+    kv.to_rung(0)                      # ledgered, byte-exact downshift
+    lo = kv_engine.kv_bytes_per_seq()
+    f_r, t_r, page_in, page_out = kv.ledger.events[-1]
+    _, _, exp_in, exp_out = kv.expected_events[-1]
+    assert (page_in, page_out) == (exp_in, exp_out) and lo < hi
+    budget = 8 * hi
+    print(f"nested KV cache: {hi} -> {lo} B/sequence after the rung "
+          f"{f_r}->{t_r} downshift (page_out {page_out}B, observed == "
+          f"computed); the same {budget}B cache budget now admits "
+          f"{budget // lo} sequences instead of {budget // hi}")
 
 
 if __name__ == "__main__":

@@ -21,6 +21,8 @@ _API = (
     "ServeEngine", "Request", "EngineStats",
     "Scheduler", "SchedulerReport", "ScheduledRequest", "LoadGenerator",
     "ServiceModel", "calibrate_qps",
+    "KVCacheConfig", "NestedKVCache", "kv_bytes_per_token",
+    "dense_kv_bytes_per_token", "kv_stream_widths", "resolve_kv_decide",
     "save_artifact", "open_artifact", "load_store", "Artifact",
     "ArtifactError", "DeltaPager", "InMemoryPager", "FilePager",
     "ThrottledPager", "LinkBudget",

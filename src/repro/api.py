@@ -32,12 +32,16 @@ from .core.switching import (NestQuantStore, RungAssignment, SwitchLedger,
 from .models import make_model
 from .serving.engine import (DecodeProfile, EngineStats, Request, ServeEngine,
                              SpecConfig, SpeculativeDecoder)
+from .serving.kv_cache import (KVCacheConfig, NestedKVCache,
+                               dense_kv_bytes_per_token, kv_bytes_per_token,
+                               kv_stream_widths)
 from .serving.policies import (POLICIES, BudgetPolicy, DeliveryHealth,
                                FailureAwarePolicy, HysteresisPolicy,
                                LoadAdaptivePolicy, QualityFloorPolicy,
                                ResourceSignal, RungPolicy, SignalTracker,
                                StaticRungPolicy, make_policy,
-                               resolve_draft_ok, simulate_policy)
+                               resolve_draft_ok, resolve_kv_decide,
+                               simulate_policy)
 from .serving.scheduler import (LoadGenerator, ScheduledRequest, Scheduler,
                                 SchedulerReport, ServiceModel, calibrate_qps)
 from .fleet import (BudgetEnvelope, ChaosProfile, DeltaDistribution,
@@ -73,6 +77,9 @@ __all__ = [
     # load-adaptive scheduling (DESIGN.md Sec. 11)
     "Scheduler", "SchedulerReport", "ScheduledRequest", "LoadGenerator",
     "ServiceModel", "calibrate_qps",
+    # nested KV cache (DESIGN.md Sec. 16)
+    "KVCacheConfig", "NestedKVCache", "kv_bytes_per_token",
+    "dense_kv_bytes_per_token", "kv_stream_widths", "resolve_kv_decide",
     # storage tier (artifacts + pagers, DESIGN.md Sec. 10)
     "save_artifact", "open_artifact", "load_store", "Artifact",
     "ArtifactError", "DeltaPager", "InMemoryPager", "FilePager",

@@ -1,1 +1,2 @@
-from . import packed_matmul, nest_recompose, nested_matmul, flash_attention
+from . import (packed_matmul, nest_recompose, nested_matmul, flash_attention,
+               nested_attention)

@@ -1,0 +1,2 @@
+from .ops import ladder_qk_scores, nested_attention, quantize_q
+from . import kernel, ops, ref

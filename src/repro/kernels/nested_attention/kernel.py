@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: int32-accumulating QK^T over packed nested KV pages.
+
+The nested KV cache (serving/kv_cache.py, DESIGN.md Sec. 16) stores K/V
+codes block-packed along the position axis with block == page and a
+PER-POSITION, per-head scale.  Because the scale does not depend on the
+contraction index d, it factors out of the dot product:
+
+    score[m, j] = q_scale[m] * k_scale[j] * sum_d qc[m, d] * kc[j, d]
+
+so the kernel can unpack the K code streams in VMEM, chain-recompose the
+resident rung (Eq. 6 per level, exactly as the weight ladder kernel),
+and accumulate the raw integer dot products with
+``preferred_element_type=jnp.int32`` - the MXU int8 path where the
+hardware has one, plain int32 multiply-accumulate under interpret mode.
+Scales, the 2^(top-bits[rung]) rung shift, softmax, and the PV matmul
+are applied OUTSIDE the kernel in f32 (kernels/nested_attention/ops.py);
+everywhere the integer path does not exist the ops layer falls back to
+recompose-to-bf16 attention on the rendered cache.
+
+Grid: one step per (batch*head, page).  Each step reads the whole query
+tile, the page's packed word rows per resident stream, and writes one
+(M, page) int32 score tile - no accumulator scratch is needed because a
+page owns its output columns exclusively.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...core.decompose import chain_recompose, delta_bits
+from ...core.packing import blocked_rows, unpack_block_words
+
+
+def _check_resident_bits(bits) -> tuple:
+    """Resident-prefix bitwidths: ascending, distinct; ONE entry is legal
+    (rung 0 = base stream only, no recompose)."""
+    b = tuple(int(x) for x in bits)
+    assert b and b == tuple(sorted(set(b))), bits
+    return b
+
+
+def _recompose_page(stream_tiles, bits, page):
+    """Unpack one page's word tiles (rows_i, D) and climb the resident
+    ladder -> (page, D) int32 codes at the resident rung."""
+    if len(bits) == 1:
+        return unpack_block_words(stream_tiles[0], bits[0], page)
+    widths = delta_bits(bits)
+    return chain_recompose(
+        unpack_block_words(stream_tiles[0], bits[0], page),
+        [unpack_block_words(stream_tiles[i], widths[i - 1], page)
+         for i in range(1, len(bits))],
+        bits)
+
+
+def _qk_kernel(q_ref, *refs, bits, page):
+    """refs = (*stream_refs, o_ref); blocks carry a leading singleton
+    batch*head dim."""
+    stream_refs, o_ref = refs[:len(bits)], refs[len(bits)]
+    kc = _recompose_page([r[0] for r in stream_refs], bits, page)  # (P, D)
+    o_ref[0] = jax.lax.dot_general(
+        q_ref[0], kc, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)                          # (M, P)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "page", "interpret"))
+def nested_qk(q_codes, streams, *, bits, page: int,
+              interpret: bool = False) -> jax.Array:
+    """Integer QK^T over packed nested K pages.
+
+    q_codes: (BH, M, D) int32 query codes; streams: tuple of
+    (BH, npages * rows_i, D) block-packed int32 K streams (base first,
+    then the resident deltas, packed along axis 1 with block == page);
+    bits: ascending RESIDENT bitwidths, one per stream.  Returns
+    (BH, M, npages * page) raw int32 scores - the caller applies
+    q_scale * k_scale * 2^(top - bits[rung]) and the softmax."""
+    bits = _check_resident_bits(bits)
+    assert len(streams) == len(bits), (len(streams), bits)
+    BH, M, D = q_codes.shape
+    widths = (bits[0],) + delta_bits(bits) if len(bits) > 1 else (bits[0],)
+    rows = [blocked_rows(page, w) for w in widths]
+    npages = streams[0].shape[1] // rows[0]
+    grid = (BH, npages)
+
+    return pl.pallas_call(
+        functools.partial(_qk_kernel, bits=bits, page=page),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, M, D), lambda b, i: (b, 0, 0)),
+            *[pl.BlockSpec((1, r, D), lambda b, i: (b, i, 0))
+              for r in rows],
+        ],
+        out_specs=pl.BlockSpec((1, M, page), lambda b, i: (b, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((BH, M, npages * page), jnp.int32),
+        interpret=interpret,
+    )(q_codes, *streams)

@@ -1,0 +1,85 @@
+"""Dispatching ops over the nested-attention kernel (DESIGN.md Sec. 16).
+
+Three layers, mirroring kernels/nested_matmul/ops.py:
+
+* :func:`quantize_q` - per-query symmetric INT quantization (amax over
+  the head dim), the activation half of the integer score path;
+* :func:`ladder_qk_scores` - raw int32 QK^T, Pallas kernel where the
+  hardware path exists (TPU, or ``interpret=True`` for CPU validation),
+  jnp reference otherwise - both are the same integer arithmetic, so
+  the dispatch is bit-invisible;
+* :func:`nested_attention` - the full op: integer scores, f32 scale
+  application + softmax, f32 PV on the dequantized V codes.
+
+The serving engine's default path stays recompose-to-bf16 (the cache
+renders into the dense jit cache); this op is the int32-accumulation
+path for backends that have it, pinned against the dense oracle by the
+kernel-parity suite at every rung.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...core.decompose import int_range
+from . import ref as _ref
+from .kernel import nested_qk
+
+
+def _use_kernel(use_pallas: Optional[bool], interpret: bool) -> bool:
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    return bool(use_pallas or interpret)
+
+
+def quantize_q(q, n: int) -> Tuple[jax.Array, jax.Array]:
+    """(BH, M, D) float queries -> (codes int32, scale (BH, M, 1) f32)
+    with a per-query symmetric INT-n scale (amax over D) - per-row, so
+    it factors out of the contraction like the per-position K scale."""
+    lo, hi = int_range(n)
+    x = q.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / hi
+    codes = jnp.clip(jnp.round(x / scale), lo, hi).astype(jnp.int32)
+    return codes, scale
+
+
+def ladder_qk_scores(q_codes, streams, *, bits, page: int,
+                     use_pallas: Optional[bool] = None,
+                     interpret: bool = False) -> jax.Array:
+    """Raw int32 scores over packed nested K pages; kernel vs reference
+    dispatch (identical integer arithmetic either way)."""
+    if _use_kernel(use_pallas, interpret):
+        return nested_qk(q_codes, tuple(streams), bits=tuple(bits),
+                         page=page, interpret=interpret)
+    return _ref.nested_qk_ref(q_codes, tuple(streams), bits=tuple(bits),
+                              page=page)
+
+
+def nested_attention(q, k_streams, k_scale, v_streams, v_scale, *,
+                     bits, page: int, rung: int,
+                     use_pallas: Optional[bool] = None,
+                     interpret: bool = False) -> jax.Array:
+    """Full nested-KV attention at ``rung``.
+
+    q: (BH, M, D) float queries; k_streams/v_streams: resident stream
+    tuples (base + deltas[:rung]) of (BH, npages*rows_i, D) packed int32;
+    k_scale/v_scale: (BH, S, 1) f32 per-position scales; bits: the FULL
+    ladder (the resident prefix is bits[:rung+1]).  Integer QK^T, then
+    f32: scores * q_scale * k_scale * 2^(top-bits[rung]) / sqrt(D),
+    softmax, and probs @ dequant(V).  Returns (BH, M, D) f32."""
+    bits = tuple(int(b) for b in bits)
+    resident = bits[:1 + rung]
+    shift = 2.0 ** (bits[-1] - bits[rung])
+    qc, q_scale = quantize_q(q, bits[-1])
+    raw = ladder_qk_scores(qc, k_streams, bits=resident, page=page,
+                           use_pallas=use_pallas, interpret=interpret)
+    scores = (raw.astype(jnp.float32) * q_scale
+              * jnp.swapaxes(k_scale, 1, 2) * shift
+              / jnp.sqrt(jnp.float32(q.shape[-1])))
+    probs = jax.nn.softmax(scores, axis=-1)
+    vc = _ref.unpack_k_codes(tuple(v_streams), bits=resident, page=page)
+    v = vc.astype(jnp.float32) * v_scale * shift
+    return jnp.einsum("bms,bsd->bmd", probs, v)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the nested-attention kernel.
+
+Same integer arithmetic as the Pallas kernel (unpack, chain-recompose,
+int32 contraction), expressed as host jnp ops - the parity target the
+CPU interpreter-mode CI job pins the kernel against, and the portable
+integer path on backends without Pallas.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core import packing
+from ...core.decompose import chain_recompose, delta_bits
+
+
+def unpack_k_codes(streams, *, bits, page: int) -> jnp.ndarray:
+    """Packed K/V streams -> (BH, S, D) int32 codes at the resident rung.
+
+    streams: tuple of (BH, npages * rows_i, D) block-packed int32 (base
+    first, packed along axis 1, block == page); bits: ascending resident
+    bitwidths, one per stream (a single entry = base only)."""
+    bits = tuple(int(x) for x in bits)
+    assert len(streams) == len(bits), (len(streams), bits)
+    S = streams[0].shape[1] // packing.blocked_rows(page, bits[0]) * page
+    base = packing.unpack_blocked(streams[0], bits[0], S, page, axis=1)
+    if len(bits) == 1:
+        return base
+    widths = delta_bits(bits)
+    return chain_recompose(
+        base,
+        [packing.unpack_blocked(streams[i], widths[i - 1], S, page, axis=1)
+         for i in range(1, len(streams))],
+        bits)
+
+
+def nested_qk_ref(q_codes, streams, *, bits, page: int) -> jnp.ndarray:
+    """Oracle for :func:`..kernel.nested_qk`: (BH, M, S) raw int32
+    scores, bit-identical to the kernel (both are integer arithmetic)."""
+    kc = unpack_k_codes(streams, bits=bits, page=page)
+    return jnp.einsum("bmd,bsd->bms", q_codes, kc,
+                      preferred_element_type=jnp.int32)
+
+
+def dense_attention_ref(q, k, v) -> jnp.ndarray:
+    """The dense-cache oracle: f32 softmax(QK^T / sqrt(D)) @ V over the
+    full (unmasked) key set - the baseline the integer path must stay
+    within a pinned tolerance of at every rung."""
+    q, k, v = (x.astype(jnp.float32) for x in (q, k, v))
+    scores = jnp.einsum("bmd,bsd->bms", q, k) / jnp.sqrt(q.shape[-1])
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("bms,bsd->bmd", probs, v)

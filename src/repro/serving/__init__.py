@@ -1,10 +1,13 @@
 from .engine import (DecodeProfile, EngineStats, Request, ServeEngine,
                      SpecConfig, SpeculativeDecoder)
+from .kv_cache import (KVCacheConfig, NestedKVCache, dense_kv_bytes_per_token,
+                       kv_bytes_per_token, kv_stream_widths)
 from .policies import (POLICIES, BudgetPolicy, DeliveryHealth,
                        FailureAwarePolicy, HysteresisPolicy,
                        LoadAdaptivePolicy, QualityFloorPolicy, ResourceSignal,
                        RungPolicy, SignalTracker, StaticRungPolicy,
-                       make_policy, resolve_draft_ok, simulate_policy)
+                       make_policy, resolve_draft_ok, resolve_kv_decide,
+                       simulate_policy)
 from .scheduler import (TRACES, LoadGenerator, RequestQueue, ScheduledRequest,
                         Scheduler, SchedulerReport, ServiceModel,
                         calibrate_qps)

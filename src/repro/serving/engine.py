@@ -26,8 +26,10 @@ from ..core.switching import NestQuantStore, RungAssignment
 from ..models.model import Model, make_model
 from ..storage.artifact import ArtifactError
 from ..storage.pager import PagerError
+from .kv_cache import KVCacheConfig, NestedKVCache, dense_kv_bytes_per_token, \
+    kv_bytes_per_token
 from .policies import (BudgetPolicy, QualityFloorPolicy, ResourceSignal,
-                       RungPolicy, SignalTracker)
+                       RungPolicy, SignalTracker, resolve_kv_decide)
 
 # what a failed rung switch looks like to the engine: every pager-tier
 # fault (transient, corrupt, quarantine) plus artifact-tier errors from
@@ -119,6 +121,10 @@ class EngineStats:
     spec_drafted: int = 0         # tokens drafted for real requests
     spec_accepted: int = 0        # drafted tokens accepted (real only)
     spec_rejected: int = 0        # drafted tokens rejected (real only)
+    # nested KV cache counters (DESIGN.md Sec. 16)
+    kv_switches: int = 0          # committed cache rung moves
+    kv_switch_failures: int = 0   # cache switch attempts rolled back
+    kv_pages: int = 0             # pages ingested over the engine's life
 
     @property
     def spec_acceptance(self) -> float:
@@ -135,13 +141,19 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, store: NestQuantStore,
                  max_batch: int = 8, max_len: int = 128,
                  policy: Optional[RungPolicy] = None, *,
-                 model: Optional[Model] = None, compiled=None):
+                 model: Optional[Model] = None, compiled=None, kv=None):
         self.cfg = cfg
         self.model = model if model is not None else make_model(cfg)
         self.store = store
         self.max_batch = max_batch
         self.max_len = max_len
         self.policy = policy if policy is not None else BudgetPolicy()
+        # nested KV cache (DESIGN.md Sec. 16): None keeps the dense bf16
+        # cache; a KVCacheConfig builds a fresh NestedKVCache; an existing
+        # cache (e.g. over a chaos/resilient pager) is adopted as-is.
+        if isinstance(kv, KVCacheConfig):
+            kv = NestedKVCache(kv)
+        self.kv: Optional[NestedKVCache] = kv
         self.stats = EngineStats()
         self.artifact = None          # set by from_artifact
         self._tracker = SignalTracker()
@@ -282,6 +294,18 @@ class ServeEngine:
                     params, {"tokens": jnp.zeros((B, spec.k + 1), jnp.int32)},
                     self.model.make_cache(B, self.max_len, dtype=cdt))
                 calls += 1
+        # nested KV cache (DESIGN.md Sec. 16): warm the quantize + render
+        # jit entries for every (KV rung x prompt shape) this loop will
+        # dispatch.  The dense jit cache shape never changes with the KV
+        # rung, so this is the ONLY extra trace surface a KV switch has -
+        # after it, a post-warmup cache rung switch retraces nothing.
+        if self.kv is not None:
+            probe = self.model.make_cache(B, self.max_len, dtype=cdt)
+            if "k" in probe:
+                Lk = probe["k"].shape[0]
+                for S in plens:
+                    calls += self.kv.warm(Lk, B, S, self.cfg.num_kv_heads,
+                                          self.cfg.head_dim)
         return calls
 
     # -- draft-rung selection (DESIGN.md Sec. 15) --------------------------
@@ -353,7 +377,13 @@ class ServeEngine:
             memory_budget_bytes=memory_budget_bytes,
             queue_depth=queue_depth, backlog_age_s=backlog_age_s,
             available_rung=self.store.max_available_rung(),
-            quarantined=len(quarantined()) if callable(quarantined) else 0)
+            quarantined=len(quarantined()) if callable(quarantined) else 0,
+            kv_rung=self.kv.rung if self.kv is not None else -1,
+            kv_num_rungs=(self.kv.config.num_rungs
+                          if self.kv is not None else 0),
+            kv_resident_bytes=(self.kv.resident_bytes()
+                               if self.kv is not None else 0))
+        self._ensure_kv_rung(signal)
         try:
             report = self.store.apply(self.policy.decide(self.store, signal))
         except SWITCH_FAILURES as e:
@@ -372,6 +402,93 @@ class ServeEngine:
             self._params = self.store.params()
         self.stats.record_mode(self.store.mode)
         return self.store.mode
+
+    # -- nested KV cache (DESIGN.md Sec. 16) -------------------------------
+    def _ensure_kv_rung(self, signal: ResourceSignal) -> None:
+        """Joint weight+KV rung selection, cache half: let the policy
+        chain pick a cache rung (``kv_decide``), clamp it to what the
+        pager can deliver, and walk there through the ledgered adjacent
+        steps.  A failed walk (chaos fault, quarantine) rolls back in
+        the cache and only LOWERS the cache rung ceiling - decode state
+        lives in the dense jit cache and is never touched, so serving
+        continues at whatever cache rung is healthy."""
+        if self.kv is None:
+            return
+        want = resolve_kv_decide(self.policy, self.kv, signal)
+        if want is None:
+            return
+        want = min(max(int(want), 0), self.kv.max_available_rung())
+        if want == self.kv.rung:
+            return
+        try:
+            self.kv.to_rung(want)
+        except SWITCH_FAILURES as e:
+            self.stats.kv_switch_failures += 1
+            self.stats.last_failure = str(e)
+            return
+        self.stats.kv_switches += 1
+
+    def kv_bytes_per_seq(self, rung: Optional[int] = None) -> int:
+        """Worst-case cache bytes ONE admitted sequence costs (max_len
+        positions): the packed nested cost at ``rung`` (default: the
+        cache's current rung) when a nested cache is attached, the dense
+        compute-dtype cost otherwise.  Pure metadata - the scheduler
+        prices admission with it before any page exists."""
+        probe = self.model.make_cache(1, 1,
+                                      dtype=jnp.dtype(self.cfg.compute_dtype))
+        if "k" not in probe:
+            return 0
+        Lk = probe["k"].shape[0]
+        if self.kv is None:
+            per_tok = dense_kv_bytes_per_token(
+                Lk, self.cfg.num_kv_heads, self.cfg.head_dim,
+                jnp.dtype(self.cfg.compute_dtype).itemsize)
+        else:
+            per_tok = kv_bytes_per_token(
+                self.kv.config, self.kv.rung if rung is None else int(rung),
+                Lk, self.cfg.num_kv_heads, self.cfg.head_dim)
+        return per_tok * self.max_len
+
+    def kv_admissible_batch(self, memory_budget_bytes: Optional[int]) -> int:
+        """Largest batch whose KV cache fits beside the CURRENT weight
+        residency under the budget (>= 1: the engine never refuses the
+        single-sequence floor; None budget = no cache constraint).  This
+        is the honest admission cap a KV downshift buys batch size
+        through - nested pages cost fewer bytes per sequence, so the
+        same free HBM admits strictly more sequences."""
+        if memory_budget_bytes is None:
+            return self.max_batch
+        per_seq = self.kv_bytes_per_seq()
+        if per_seq <= 0:
+            return self.max_batch
+        free = memory_budget_bytes - self.store.resident_bytes()
+        return max(1, min(self.max_batch, free // per_seq))
+
+    def _kv_ingest(self, cache, S: int) -> None:
+        """Quantize the prompt region of a freshly re-homed cache into
+        nested pages and render them back at the current cache rung (the
+        recompose-to-bf16 fallback path - the packed streams are the
+        cache of record, the dense buffer its rendering).  The partial
+        tail page and all decode positions stay dense."""
+        if self.kv is None or "k" not in cache:
+            return
+        n = self.kv.ingest(cache["k"][:, :, :S], cache["v"][:, :, :S])
+        if not n:
+            return
+        self.stats.kv_pages += n
+        kq, vq = self.kv.render()
+        zeros = (0,) * cache["k"].ndim
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], kq.astype(cache["k"].dtype), zeros)
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], vq.astype(cache["v"].dtype), zeros)
+
+    def _kv_rewind(self, pos: int) -> None:
+        """Rung-aware speculative rewind hook: retire nested pages the
+        rewind invalidates WITHOUT fetching anything (see
+        NestedKVCache.rewind).  No-op for the dense cache."""
+        if self.kv is not None:
+            self.kv.rewind(pos)
 
     # -- serving -----------------------------------------------------------
     def generate(self, requests: List[Request],
@@ -437,6 +554,7 @@ class ServeEngine:
             else:
                 full[key] = v
         cache = full
+        self._kv_ingest(cache, S)
         next_tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
         if spec is not None:
             SpeculativeDecoder(self, spec).decode(
@@ -518,7 +636,11 @@ class SpeculativeDecoder:
                 drafts.append(cur)
             draft_steps += k
             d = jnp.concatenate(drafts, axis=1)             # (B, k)
-            # 2. verify: ONE full-residency chunk over [t, d_1..d_k]
+            # 2. verify: ONE full-residency chunk over [t, d_1..d_k].
+            # Rung-aware rewind first (DESIGN.md Sec. 16): nested pages
+            # past ``pos`` are retired without re-fetching paged-out
+            # deltas; the dense cache just has its position moved back.
+            eng._kv_rewind(pos)
             cache["pos"] = jnp.asarray(pos, jnp.int32)      # rewind
             chunk = jnp.concatenate([t_last, d], axis=1)    # (B, k+1)
             vlogits, cache = eng._decode_chunk(params, {"tokens": chunk},

@@ -1,0 +1,480 @@
+"""Nested KV cache: ladder-quantized K/V paging (DESIGN.md Sec. 16).
+
+The weight ladder made residency elastic, but at production batch sizes
+the KV cache is the real HBM wall - and it was still dense bf16, so a
+weight-rung downshift freed bytes the scheduler could not spend on
+admission.  This module makes the cache a ladder citizen: K/V blocks are
+quantized PER PAGE with the same :func:`~repro.core.decompose.
+chain_decompose` as weights, so a cache rung is a base code stream plus
+prefix-resident delta streams, and a rung downshift pages KV deltas out
+through the existing :class:`~repro.storage.pager.DeltaPager` / ledger
+machinery with observed == computed ``bytes(delta_k)`` asserted exactly
+as for weights.
+
+Layout (one page = ``page`` consecutive positions, spanning all layers):
+
+* codes: the K (or V) slab ``(L, B, page, Hkv, hd)`` is quantized to
+  INT-``bits[-1]`` with a PER-POSITION, per-head scale (amax over the
+  ``hd`` axis).  Per-position scales factor OUT of the QK^T contraction
+  (the scale does not depend on the reduction index ``d``), which is
+  what lets the nested_attention kernel accumulate integer dot products
+  and apply ``q_scale * k_scale[j]`` afterwards - a per-channel scale
+  would poison the int32 path.
+* streams: ``chain_decompose(codes, bits)`` then
+  :func:`~repro.core.packing.pack_blocked` along the position axis with
+  ``block == page`` - the same exact-bit int32-word layout the weight
+  kernels consume, so observed paged bytes equal the metadata-computed
+  stream size by construction and the ledger assertion is meaningful.
+* residency: rung ``r`` holds the base stream plus delta streams
+  ``0..r-1`` per page; non-resident deltas live in the pager (deposited
+  at page creation via ``pager.put``), exactly mirroring
+  :class:`~repro.core.switching.NestQuantStore` leaves.
+
+Decode state is NEVER the packed form: the engine renders the paged
+prompt region back into the dense jit cache at the current KV rung
+(recompose-to-bf16 fallback), or hands the packed streams to the
+``kernels.nested_attention`` int32 path where it exists.  Rendering is
+jitted per (bits, page, rung) - :data:`KV_TRACES` counts traces so the
+retrace-regression tests can pin "a KV rung switch after warmup causes
+zero new traces".
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import packing
+from ..core.decompose import (ROUNDINGS, chain_decompose, chain_recompose,
+                              delta_bits, int_range, normalize_bits)
+from ..core.switching import SwitchLedger
+from ..storage.pager import InMemoryPager
+
+# jit TRACE counters for the KV pipeline (each bumps once per trace, not
+# per call): the retrace-regression suite snapshots these around warmup
+# and asserts a post-warmup KV rung switch adds ZERO entries.
+KV_TRACES: Dict[str, int] = {"quantize": 0, "render": 0}
+
+
+def kv_stream_widths(bits) -> Tuple[int, ...]:
+    """Stored widths of the KV streams: (base bits, *delta widths)."""
+    b = normalize_bits(bits)
+    return (b[0],) + delta_bits(b)
+
+
+@dataclass(frozen=True)
+class KVCacheConfig:
+    """Ladder shape of the nested KV cache.
+
+    ``bits`` is the rung ladder (normalized ascending, rung 0 = base,
+    top rung = the full-code cache); ``page`` positions per page (pages
+    span all layers and the whole batch); ``rounding`` the per-level
+    split method fed to :func:`~repro.core.decompose.chain_decompose`."""
+    bits: Tuple[int, ...] = (4, 8)
+    page: int = 16
+    rounding: str = "rtn"
+
+    def __post_init__(self):
+        object.__setattr__(self, "bits", normalize_bits(self.bits))
+        if self.page < 1:
+            raise ValueError(f"page must be >= 1, got {self.page}")
+        if self.rounding not in ROUNDINGS:
+            raise ValueError(f"rounding {self.rounding!r} not in {ROUNDINGS}")
+
+    @property
+    def num_rungs(self) -> int:
+        return len(self.bits)
+
+    @property
+    def widths(self) -> Tuple[int, ...]:
+        return kv_stream_widths(self.bits)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "page", "rounding"))
+def _quantize_kv(slab: jax.Array, *, bits: Tuple[int, ...], page: int,
+                 rounding: str):
+    """One K or V slab ``(L, B, S, Hkv, hd)`` -> (packed streams, scale).
+
+    Per-position, per-head symmetric scale (amax over ``hd``); codes at
+    the TOP rung bits, then the ladder split.  ``S`` must be a page
+    multiple (the cache quantizes full pages only)."""
+    KV_TRACES["quantize"] += 1
+    b = normalize_bits(bits)
+    lo, hi = int_range(b[-1])
+    x = slab.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / hi                 # (L, B, S, Hkv, 1)
+    codes = jnp.clip(jnp.round(x / scale), lo, hi).astype(jnp.int32)
+    base, deltas = chain_decompose(codes, b, method=rounding)
+    streams = tuple(packing.pack_blocked(s, w, page, axis=2)
+                    for s, w in zip((base, *deltas), kv_stream_widths(b)))
+    return streams, scale
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "page", "rung"))
+def _render_kv(streams, scale: jax.Array, *, bits: Tuple[int, ...],
+               page: int, rung: int) -> jax.Array:
+    """Packed streams (base + deltas[:rung]) -> dense f32 values at
+    ``rung``.  Codes at rung r approximate the top-bit codes shifted
+    down by ``bits[-1] - bits[r]``, so the dequant multiplies back."""
+    KV_TRACES["render"] += 1
+    b = normalize_bits(bits)
+    widths = kv_stream_widths(b)
+    S = scale.shape[2]
+    codes = [packing.unpack_blocked(w, widths[l], S, page, axis=2)
+             for l, w in enumerate(streams)]
+    c = chain_recompose(codes[0], codes[1:], b, rung=rung)
+    return c.astype(jnp.float32) * scale * (2 ** (b[-1] - b[rung]))
+
+
+def kv_bytes_per_token(config: KVCacheConfig, rung: int, num_layers: int,
+                       num_kv_heads: int, head_dim: int) -> int:
+    """Bytes ONE position costs at ``rung`` (both K and V, all layers):
+    resident packed words plus the per-position scales.  Pure metadata -
+    the admission planner prices a sequence before any page exists."""
+    widths = config.widths[:1 + rung]
+    words = sum(packing.blocked_rows(config.page, w) for w in widths)
+    stream = num_layers * num_kv_heads * head_dim * 4 * words // config.page
+    scales = num_layers * num_kv_heads * 4
+    return 2 * (stream + scales)
+
+
+def dense_kv_bytes_per_token(num_layers: int, num_kv_heads: int,
+                             head_dim: int, dtype_bytes: int = 2) -> int:
+    """What the dense cache charges per position (the bf16 baseline)."""
+    return 2 * num_layers * num_kv_heads * head_dim * dtype_bytes
+
+
+@dataclass
+class KVPage:
+    """One quantized span of ``page`` positions (all layers, full batch).
+
+    ``deltas[t][i]`` is delta stream i of tensor t when resident, None
+    when paged out (the pager holds the pristine copy either way)."""
+    index: int
+    start: int
+    base: Dict[str, jax.Array]
+    deltas: Dict[str, List[Optional[jax.Array]]]
+    scales: Dict[str, jax.Array]
+
+
+class NestedKVCache:
+    """Paged, ladder-quantized KV cache with pager-backed rung state.
+
+    Mirrors :class:`~repro.core.switching.NestQuantStore` for cache
+    bytes: ``to_rung`` walks ONE ADJACENT RUNG AT A TIME, fetching or
+    evicting exactly the delta streams of that step across all resident
+    pages, asserting observed == metadata-computed bytes, and recording
+    the move in its own :class:`~repro.core.switching.SwitchLedger`.
+    ``ingest`` quantizes a prompt region into pages (retiring the
+    previous batch's pages first - page creation and retirement are cache
+    lifecycle, not rung switches, so neither is ledgered, exactly as
+    store construction is not); ``render`` recomposes the paged region
+    to dense values at the current rung; ``rewind`` is the
+    rung-aware speculative-decode hook - it drops pages past the rewind
+    point WITHOUT fetching anything (paged-out deltas stay out).
+    """
+
+    TENSORS = ("k", "v")
+
+    def __init__(self, config: Optional[KVCacheConfig] = None, *,
+                 pager=None, ledger: Optional[SwitchLedger] = None,
+                 tag: str = "kv"):
+        self.config = config if config is not None else KVCacheConfig()
+        self.pager = pager if pager is not None else InMemoryPager({})
+        self.ledger = ledger if ledger is not None else SwitchLedger()
+        self.tag = tag
+        self.rung = self.config.num_rungs - 1
+        self.pages: List[KVPage] = []
+        self.rewound_pages = 0
+        # one entry per ledger event: (from_rung, to_rung, expected_in,
+        # expected_out) computed from METADATA at switch time, so callers
+        # (Scheduler switch records, benches) can re-assert observed ==
+        # computed after the pages that moved are long retired.
+        self.expected_events: List[Tuple[int, int, int, int]] = []
+        self._gen = 0
+        self._geom: Optional[Tuple[int, int, int, int]] = None  # L,B,Hkv,hd
+
+    # -- pager plumbing ----------------------------------------------------
+    def _backing(self):
+        """The innermost pager exposing ``put`` (Chaos/Resilient/Throttled
+        wrappers delegate fetches but do not intercept deposits)."""
+        p, seen = self.pager, set()
+        while p is not None and id(p) not in seen:
+            seen.add(id(p))
+            if hasattr(p, "put"):
+                return p
+            p = getattr(p, "inner", None)
+        raise TypeError(
+            f"pager {type(self.pager).__name__} (nor any .inner) exposes "
+            "put(); the nested KV cache needs a deposit-capable backing "
+            "pager such as InMemoryPager")
+
+    def _path(self, page_index: int, tensor: str) -> str:
+        return f"{self.tag}/g{self._gen}/p{page_index}/{tensor}"
+
+    # -- byte metadata -----------------------------------------------------
+    def _geom_elems(self) -> int:
+        assert self._geom is not None, "no pages ingested yet"
+        L, B, H, D = self._geom
+        return L * B * H * D
+
+    def stream_bytes(self, level: int) -> int:
+        """Metadata-computed bytes of ONE stream (level 0 = base, level
+        1+i = delta i) of ONE tensor of ONE page."""
+        w = self.config.widths[level]
+        return packing.blocked_rows(self.config.page, w) * self._geom_elems() * 4
+
+    def delta_bytes(self, i: int) -> int:
+        """Bytes the rung i -> i+1 move touches across the CURRENT pages
+        (both tensors) - the KV analogue of ``NestQuantStore.delta_bytes``."""
+        if not 0 <= i < self.config.num_rungs - 1:
+            raise ValueError(f"no delta stream {i} on a "
+                             f"{self.config.num_rungs}-rung ladder")
+        if not self.pages:
+            return 0
+        return 2 * len(self.pages) * self.stream_bytes(1 + i)
+
+    def scale_bytes(self) -> int:
+        if not self.pages:
+            return 0
+        L, B, H, _ = self._geom
+        return 2 * len(self.pages) * L * B * self.config.page * H * 4
+
+    def resident_bytes(self) -> int:
+        """HBM the packed cache holds right now (base + scales + the
+        first ``rung`` delta streams of every page, both tensors)."""
+        if not self.pages:
+            return 0
+        per_tensor = sum(self.stream_bytes(l) for l in range(1 + self.rung))
+        return 2 * len(self.pages) * per_tensor + self.scale_bytes()
+
+    def rung_resident_bytes(self, rung: int) -> int:
+        """Would-be resident bytes WITH ``rung`` resident (same pages)."""
+        if not self.pages:
+            return 0
+        per_tensor = sum(self.stream_bytes(l) for l in range(1 + rung))
+        return 2 * len(self.pages) * per_tensor + self.scale_bytes()
+
+    # -- lifecycle ---------------------------------------------------------
+    def clear(self) -> int:
+        """Retire ALL pages (new batch, or shutdown): resident streams are
+        dropped and the pager forgets the backing copies.  Not a rung
+        switch - nothing is ledgered (mirrors store construction)."""
+        n = len(self.pages)
+        backing = self._backing() if self.pages else None
+        for pg in self.pages:
+            for t in self.TENSORS:
+                path = self._path(pg.index, t)
+                for i in range(self.config.num_rungs - 1):
+                    if hasattr(backing, "discard"):
+                        backing.discard(path, i)
+        self.pages = []
+        return n
+
+    def ingest(self, k: jax.Array, v: jax.Array,
+               length: Optional[int] = None) -> int:
+        """Quantize the leading ``length`` positions of dense K/V slabs
+        ``(L, B, S, Hkv, hd)`` into pages (full pages only - a partial
+        tail page stays dense in the jit cache).  Replaces the previous
+        batch's pages.  All delta streams are deposited in the pager so
+        later upgrades re-fetch through the same protocol as weights;
+        levels above the current rung are immediately non-resident.
+        Returns the number of pages created."""
+        P = self.config.page
+        L, B, S, H, D = k.shape
+        n = (S if length is None else min(int(length), S)) // P
+        self.clear()
+        self._gen += 1
+        if n == 0:
+            return 0
+        self._geom = (L, B, H, D)
+        backing = self._backing()
+        span = n * P
+        packed = {}
+        for t, slab in (("k", k), ("v", v)):
+            packed[t] = _quantize_kv(
+                slab[:, :, :span], bits=self.config.bits, page=P,
+                rounding=self.config.rounding)
+        widths = self.config.widths
+        rpb = [packing.blocked_rows(P, w) for w in widths]
+        for i in range(n):
+            base, deltas, scales = {}, {}, {}
+            for t in self.TENSORS:
+                streams, scale = packed[t]
+                base[t] = streams[0][:, :, i * rpb[0]:(i + 1) * rpb[0]]
+                scales[t] = scale[:, :, i * P:(i + 1) * P]
+                dl: List[Optional[jax.Array]] = []
+                for d, words in enumerate(streams[1:]):
+                    r = rpb[1 + d]
+                    w = words[:, :, i * r:(i + 1) * r]
+                    backing.put(self._path(i, t), d, w)
+                    dl.append(w if d < self.rung else None)
+                deltas[t] = dl
+            self.pages.append(KVPage(index=i, start=i * P, base=base,
+                                     deltas=deltas, scales=scales))
+        return n
+
+    # -- rung state machine ------------------------------------------------
+    def max_available_rung(self) -> int:
+        """Highest rung the pager can deliver for EVERY page right now
+        (a quarantining ResilientPager lowers this while a KV stream is
+        fenced off - the cache rung degrades, decode state never does)."""
+        for i in range(self.config.num_rungs - 1):
+            for pg in self.pages:
+                for t in self.TENSORS:
+                    if (pg.deltas[t][i] is None
+                            and not self.pager.available(self._path(pg.index, t), i)):
+                        return i
+        return self.config.num_rungs - 1
+
+    def to_rung(self, target: int) -> int:
+        """Walk the cache rung to ``target``, one adjacent rung at a time,
+        each step ATOMIC across all pages: every fetch lands (bytes
+        asserted against metadata) before anything is spliced, and a
+        failure mid-step evicts what was staged and leaves residency,
+        rung, and ledger untouched."""
+        target = max(0, min(int(target), self.config.num_rungs - 1))
+        while self.rung < target:
+            self._step(self.rung + 1)
+        while self.rung > target:
+            self._step(self.rung - 1)
+        return self.rung
+
+    def _step(self, to: int) -> None:
+        frm = self.rung
+        assert abs(to - frm) == 1, (frm, to)
+        if not self.pages:          # no bytes move: rung is pure metadata
+            self.rung = to
+            return
+        lvl = min(frm, to)                   # delta index this step moves
+        expect_each = self.stream_bytes(1 + lvl) if self.pages else 0
+        if to > frm:
+            staged, obs = [], 0
+            try:
+                for pg in self.pages:
+                    for t in self.TENSORS:
+                        path = self._path(pg.index, t)
+                        words = self.pager.fetch(path, lvl)
+                        staged.append((pg, t, path, words))
+                        got = int(words.size) * words.dtype.itemsize
+                        if got != expect_each:
+                            raise RuntimeError(
+                                f"pager returned {got} bytes for {path} "
+                                f"delta {lvl}; metadata says "
+                                f"bytes(delta_{lvl}) = {expect_each}")
+                        obs += got
+            except BaseException:
+                for _, _, path, _ in staged:
+                    self.pager.evict(path, lvl)
+                raise
+            for pg, t, _, words in staged:
+                pg.deltas[t][lvl] = words
+            expect = 2 * len(self.pages) * expect_each
+            if obs != expect:
+                raise RuntimeError(
+                    f"KV upgrade {frm}->{to} observed {obs} bytes; "
+                    f"metadata says {expect}")
+            self.ledger.record(obs, 0, from_rung=frm, to_rung=to)
+            self.expected_events.append((frm, to, expect, 0))
+        else:
+            obs = 0
+            for pg in self.pages:
+                for t in self.TENSORS:
+                    words = pg.deltas[t][lvl]
+                    got = int(words.size) * words.dtype.itemsize
+                    if got != expect_each:
+                        raise RuntimeError(
+                            f"resident KV stream {lvl} of page {pg.index} "
+                            f"holds {got} bytes; metadata says "
+                            f"bytes(delta_{lvl}) = {expect_each}")
+                    self.pager.evict(self._path(pg.index, t), lvl)
+                    pg.deltas[t][lvl] = None
+                    obs += got
+            expect = 2 * len(self.pages) * expect_each
+            if obs != expect:
+                raise RuntimeError(
+                    f"KV downgrade {frm}->{to} observed {obs} bytes; "
+                    f"metadata says {expect}")
+            self.ledger.record(0, obs, from_rung=frm, to_rung=to)
+            self.expected_events.append((frm, to, 0, expect))
+        self.rung = to
+
+    # -- speculative-decode hook (DESIGN.md Sec. 16) -----------------------
+    def rewind(self, pos: int) -> int:
+        """Rung-aware rewind: drop every page at or past ``pos``.
+
+        Speculative verify rewinds the cache position; pages whose span
+        the rewind invalidates are simply RETIRED - resident streams
+        dropped, backing copies forgotten - with ZERO pager fetches, so
+        a downshifted cache never re-pulls deltas it paged out just to
+        throw positions away.  Decode state lives in the dense jit
+        cache, untouched.  Returns the number of pages dropped."""
+        keep, drop = [], []
+        for pg in self.pages:
+            (drop if pg.start + self.config.page > pos else keep).append(pg)
+        if drop:
+            backing = self._backing()
+            for pg in drop:
+                for t in self.TENSORS:
+                    path = self._path(pg.index, t)
+                    for i in range(self.config.num_rungs - 1):
+                        if hasattr(backing, "discard"):
+                            backing.discard(path, i)
+            self.rewound_pages += len(drop)
+        self.pages = keep
+        return len(drop)
+
+    # -- dense interop -----------------------------------------------------
+    def render(self, rung: Optional[int] = None,
+               dtype=jnp.float32) -> Optional[Tuple[jax.Array, jax.Array]]:
+        """Recompose the paged region to dense ``(k, v)`` values at
+        ``rung`` (default: current; must be <= current - rendering can
+        never fetch).  None when no pages are resident."""
+        if not self.pages:
+            return None
+        r = self.rung if rung is None else int(rung)
+        if not 0 <= r <= self.rung:
+            raise ValueError(f"render rung {r} not resident (cache rung "
+                             f"= {self.rung}; rendering never fetches)")
+        out = []
+        for t in self.TENSORS:
+            streams = [jnp.concatenate([pg.base[t] for pg in self.pages],
+                                       axis=2)]
+            for i in range(r):
+                streams.append(jnp.concatenate(
+                    [pg.deltas[t][i] for pg in self.pages], axis=2))
+            scale = jnp.concatenate([pg.scales[t] for pg in self.pages],
+                                    axis=2)
+            out.append(_render_kv(tuple(streams), scale,
+                                  bits=self.config.bits,
+                                  page=self.config.page,
+                                  rung=r).astype(dtype))
+        return out[0], out[1]
+
+    def warm(self, num_layers: int, batch: int, positions: int,
+             num_kv_heads: int, head_dim: int, rungs=None) -> int:
+        """Pre-trace the quantize + render jit entries for this geometry
+        (throwaway buffers; pages, rung, ledger, pager untouched) so a
+        post-warmup KV rung switch hits the jit cache.  Returns the
+        number of warm-up calls."""
+        P = self.config.page
+        n = positions // P
+        if n == 0:
+            return 0
+        span = n * P
+        slab = jnp.zeros((num_layers, batch, span, num_kv_heads, head_dim),
+                         jnp.float32)
+        streams, scale = _quantize_kv(slab, bits=self.config.bits, page=P,
+                                      rounding=self.config.rounding)
+        calls = 1
+        rungs = (range(self.config.num_rungs) if rungs is None
+                 else sorted(set(rungs)))
+        for r in rungs:
+            _render_kv(tuple(streams[:1 + r]), scale, bits=self.config.bits,
+                       page=P, rung=r)
+            calls += 1
+        return calls

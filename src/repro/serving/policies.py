@@ -87,6 +87,11 @@ class ResourceSignal:
     recent_switches: Tuple[int, ...] = ()
     backlog_age_s: float = 0.0
     delivery_health: DeliveryHealth = DeliveryHealth()
+    # nested KV cache residency (DESIGN.md Sec. 16); defaults mean "no
+    # nested cache attached" so pre-KV callers are untouched.
+    kv_rung: int = -1                         # current cache rung (-1 = none)
+    kv_num_rungs: int = 0                     # cache ladder depth (0 = none)
+    kv_resident_bytes: int = 0                # packed cache bytes right now
 
 
 @runtime_checkable
@@ -156,6 +161,26 @@ class LoadAdaptivePolicy:
         if signal.queue_depth <= self.low_depth:
             return RungAssignment.uniform(min(cur + 1, cap))
         return RungAssignment.uniform(cur)
+
+    def kv_decide(self, kv, signal: ResourceSignal) -> int:
+        """Joint weight+KV rung selection, cache half (DESIGN.md
+        Sec. 16): one cache rung DOWN under the same backlog pressure
+        that walks the weight rung down, one back UP when drained.
+        The payoff is different though - a KV downshift shrinks the
+        PER-SEQUENCE cache cost, so the scheduler can trade it for a
+        strictly larger admitted batch at the same HBM budget.  ``kv``
+        is the read-only :class:`~repro.serving.kv_cache.NestedKVCache`;
+        returns the target cache rung (the engine clamps it to what the
+        pager can deliver and applies it through the ledgered walk)."""
+        cur = kv.rung
+        pressured = (signal.queue_depth >= self.high_depth
+                     or (self.max_age_s is not None
+                         and signal.backlog_age_s >= self.max_age_s))
+        if pressured:
+            return max(cur - 1, 0)
+        if signal.queue_depth <= self.low_depth:
+            return min(cur + 1, kv.config.num_rungs - 1)
+        return cur
 
     def draft_ok(self, signal: ResourceSignal) -> bool:
         """The drafting on/off signal (DESIGN.md Sec. 15): speculative
@@ -346,6 +371,22 @@ def resolve_draft_ok(policy, signal: ResourceSignal) -> Optional[bool]:
     return None
 
 
+def resolve_kv_decide(policy, kv, signal: ResourceSignal) -> Optional[int]:
+    """Walk a policy wrapper chain (``.inner`` links) for a ``kv_decide``
+    cache-rung verdict (DESIGN.md Sec. 16).  Returns the target cache
+    rung of the first policy (outside-in) that exposes one, or None when
+    no policy in the chain selects KV rungs (the engine then leaves the
+    cache rung alone)."""
+    seen = set()
+    while policy is not None and id(policy) not in seen:
+        seen.add(id(policy))
+        fn = getattr(policy, "kv_decide", None)
+        if callable(fn):
+            return int(fn(kv, signal))
+        policy = getattr(policy, "inner", None)
+    return None
+
+
 POLICIES = {"budget": BudgetPolicy, "hysteresis": HysteresisPolicy,
             "quality": QualityFloorPolicy, "load": LoadAdaptivePolicy,
             "static": StaticRungPolicy, "failure": FailureAwarePolicy}
@@ -377,7 +418,9 @@ class SignalTracker:
     def signal(self, memory_budget_bytes: Optional[int] = None,
                queue_depth: int = 0, backlog_age_s: float = 0.0,
                available_rung: Optional[int] = None,
-               quarantined: int = 0) -> ResourceSignal:
+               quarantined: int = 0, kv_rung: int = -1,
+               kv_num_rungs: int = 0,
+               kv_resident_bytes: int = 0) -> ResourceSignal:
         health = DeliveryHealth(
             failures=self.delivery_failures,
             consecutive_failures=self.consecutive_failures,
@@ -387,7 +430,9 @@ class SignalTracker:
                               queue_depth=queue_depth, step=self.step,
                               recent_switches=tuple(self.switch_steps),
                               backlog_age_s=backlog_age_s,
-                              delivery_health=health)
+                              delivery_health=health, kv_rung=kv_rung,
+                              kv_num_rungs=kv_num_rungs,
+                              kv_resident_bytes=kv_resident_bytes)
 
     def note(self, moved: bool, failed: bool = False):
         """Advance one decision, remembering whether residency changed

@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import math
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field as dc_field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -196,11 +196,17 @@ class ServiceModel:
     batch_overhead_s: float = 5e-5    # per-batch fixed cost (launch etc.)
     switch_latency_s: float = 1e-4    # per ledger move fixed cost
 
-    def batch_seconds(self, resident_bytes: int, steps: int) -> float:
+    def batch_seconds(self, resident_bytes: int, steps: int,
+                      kv_bytes: int = 0) -> float:
         """Virtual seconds to serve one batch of ``steps`` decode steps
-        with ``resident_bytes`` of weights resident."""
+        with ``resident_bytes`` of weights resident.  ``kv_bytes`` is
+        the batch's KV-cache bytes (DESIGN.md Sec. 16): every decode
+        step re-streams the cache alongside the weights, so a kv-aware
+        scheduler charges it per step - cache bytes scale with the
+        admitted batch, which is exactly the wall nested KV pages lower."""
         return (self.batch_overhead_s
-                + steps * resident_bytes / (self.weight_gbps * 1e9))
+                + steps * (resident_bytes + kv_bytes)
+                / (self.weight_gbps * 1e9))
 
     def switch_seconds(self, page_bytes: int, moves: int) -> float:
         """Virtual seconds a residency change stalls the engine for."""
@@ -260,6 +266,10 @@ class SchedulerReport:
     switch_records: List[Dict[str, int]]
     elapsed_s: float
     trace_kind: str
+    # nested KV cache rung moves (DESIGN.md Sec. 16): same exactness
+    # contract as switch_records, over the cache's own ledger.  Empty
+    # for engines without a nested cache (the pre-KV default).
+    kv_switch_records: List[Dict[str, int]] = dc_field(default_factory=list)
 
     def latency(self, kind: str = "total") -> Dict[str, float]:
         """p50/p95/mean/max of 'queue' | 'service' | 'total' latency."""
@@ -427,7 +437,7 @@ class Scheduler:
                  admit_wait_s: float = 0.01,
                  memory_budget_bytes: Optional[int] = None,
                  bucket_batches: bool = True, clock=None,
-                 speculate=None):
+                 speculate=None, kv_aware: bool = False):
         if max_batch is None:
             max_batch = engine.max_batch
         if max_batch > engine.max_batch:
@@ -454,6 +464,12 @@ class Scheduler:
         if speculate is not None and not isinstance(speculate, SpecConfig):
             speculate = SpecConfig(k=int(speculate))
         self.speculate = speculate
+        # kv-aware admission + honest cache-byte charging (DESIGN.md
+        # Sec. 16): admission is capped by what the KV cache of the
+        # admitted sequences costs beside the weight residency, and every
+        # decode step is charged the batch's cache bytes.  Off by default
+        # - the pre-KV cost model is weight-only and stays byte-identical.
+        self.kv_aware = kv_aware
 
         self._started = False
 
@@ -477,6 +493,7 @@ class Scheduler:
         self._done: List[ScheduledRequest] = []
         self._steps: List[Dict[str, object]] = []
         self._switch_records: List[Dict[str, int]] = []
+        self._kv_switch_records: List[Dict[str, int]] = []
         self._i = 0
         self._now = 0.0
         self._started = True
@@ -543,7 +560,14 @@ class Scheduler:
             queue.push(ScheduledRequest(
                 Request(a.uid, a.prompt, a.max_new_tokens), a.t))
             self._i += 1
-        batch = queue.admit(now, self.max_batch)
+        admit_cap = self.max_batch
+        if self.kv_aware:
+            # a KV downshift shrinks per-sequence cache bytes, so the
+            # same free HBM admits strictly more sequences - the trade
+            # LoadAdaptivePolicy.kv_decide makes under pressure
+            admit_cap = min(admit_cap, eng.kv_admissible_batch(
+                self.memory_budget_bytes))
+        batch = queue.admit(now, admit_cap)
         # -- signal ---------------------------------------------------------
         depth = len(queue)                   # backlog BEHIND this batch
         age = queue.oldest_age_s(now)
@@ -557,6 +581,7 @@ class Scheduler:
                            for _ in range(n_filler)]
         # -- decide + page + generate --------------------------------------
         ev0 = len(store.ledger.events)
+        kv_ev0 = len(eng.kv.ledger.events) if eng.kv is not None else 0
         rungs_before = store.leaf_rungs()
         rung_before = store.rung
         failures0 = eng.stats.switch_failures
@@ -606,9 +631,32 @@ class Scheduler:
                  "to_rung": store.rung, "moves": len(moved),
                  "page_in": page_in, "page_out": page_out,
                  "expected_in": expect_in, "expected_out": expect_out})
+        # nested KV cache rung moves this step (DESIGN.md Sec. 16): the
+        # cache ledger records observed bytes, expected_events the
+        # metadata-computed bytes(delta_k) - same exactness contract as
+        # the weight switch_records above
+        kv_page_in = kv_page_out = 0
+        kv_moves = 0
+        if eng.kv is not None:
+            kv_moved = eng.kv.ledger.events[kv_ev0:]
+            kv_moves = len(kv_moved)
+            for (f, t, pin, pout), (ef, et, ein, eout) in zip(
+                    kv_moved, eng.kv.expected_events[kv_ev0:]):
+                kv_page_in += pin
+                kv_page_out += pout
+                self._kv_switch_records.append(
+                    {"step": len(self._steps), "from_rung": f,
+                     "to_rung": t, "moves": 1,
+                     "page_in": pin, "page_out": pout,
+                     "expected_in": ein, "expected_out": eout})
         # -- advance the virtual clock -------------------------------------
         switch_s = self.service.switch_seconds(page_in + page_out,
                                                len(moved)) + fault_s
+        if self.kv_aware:
+            switch_s += self.service.switch_seconds(
+                kv_page_in + kv_page_out, kv_moves)
+        kv_bytes = (eng.kv_bytes_per_seq() * len(batch)
+                    if self.kv_aware else 0)
         if spec is not None and profile is not None and profile.speculative:
             # charge what was ACTUALLY dispatched: k draft steps at the
             # draft rung's bytes + one full-residency pass per verify
@@ -616,7 +664,8 @@ class Scheduler:
         else:
             batch_s = self.service.batch_seconds(
                 store.resident_bytes(),
-                max(s.request.max_new_tokens for s in batch))
+                max(s.request.max_new_tokens for s in batch),
+                kv_bytes=kv_bytes)
         now += switch_s + batch_s
         for s in batch:
             s.done_s = now
@@ -630,6 +679,8 @@ class Scheduler:
                            and profile.speculative)
         rec = {"step": len(self._steps), "admit_s": batch[0].admit_s,
                "done_s": now, "batch": len(batch),
+               "admit_cap": admit_cap,
+               "kv_rung": eng.kv.rung if eng.kv is not None else -1,
                "filler": n_filler, "queue_depth": depth,
                "backlog_age_s": age, "mode": store.mode,
                "rung": store.rung, "page_in": page_in,
@@ -653,7 +704,8 @@ class Scheduler:
         return SchedulerReport(requests=self._done, steps=self._steps,
                                switch_records=self._switch_records,
                                elapsed_s=self._now,
-                               trace_kind=self.trace.kind)
+                               trace_kind=self.trace.kind,
+                               kv_switch_records=self._kv_switch_records)
 
     def run(self) -> SchedulerReport:
         self.start()

@@ -199,6 +199,19 @@ class InMemoryPager:
                 "in-memory pager - was the store built from a base-only "
                 "tree without a FilePager?") from None
 
+    def put(self, path: str, level: int, words: jax.Array) -> None:
+        """Register a stream produced at runtime (the nested KV cache
+        deposits freshly quantized page deltas here, so later rung
+        upgrades re-fetch them through the same protocol as weights)."""
+        self._streams[(path, level)] = words
+        self._crc.pop((path, level), None)
+
+    def discard(self, path: str, level: int) -> None:
+        """Forget a stream entirely (page retirement - unlike ``evict``,
+        which keeps the pristine host copy for later re-fetch)."""
+        self._streams.pop((path, level), None)
+        self._crc.pop((path, level), None)
+
     def evict(self, path: str, level: int) -> None:
         pass                        # host copy stays: the classic behavior
 

@@ -1,0 +1,45 @@
+"""Shared test helpers: the ledger-exactness assertions every tier
+repeats (storage, chaos, scheduler, fleet - and now the nested KV
+cache).
+
+The repo's core invariant is "observed page traffic == metadata-computed
+bytes(delta_k), always" (DESIGN.md Sec. 10-12).  Each suite used to
+carry its own copy of the check; they live here so a new tier asserts
+the same contract by importing, not re-deriving it.
+"""
+from __future__ import annotations
+
+
+def assert_switch_records_exact(records, store=None):
+    """Every switch decision's observed page bytes equal the
+    metadata-computed expectation recorded with it.
+
+    With ``store`` given, additionally require each record to be a
+    UNIFORM ADJACENT rung move whose total traffic is exactly the
+    tree-wide ``bytes(delta_k)`` quantum of Table 11 (only valid for
+    schedules known to walk the whole tree one rung at a time - chaos
+    storms and fleets make per-leaf moves, so they pass no store)."""
+    for rec in records:
+        assert rec["page_in"] == rec["expected_in"], rec
+        assert rec["page_out"] == rec["expected_out"], rec
+        if store is not None:
+            assert abs(rec["from_rung"] - rec["to_rung"]) == 1, rec
+            k = min(rec["from_rung"], rec["to_rung"])
+            assert rec["page_in"] + rec["page_out"] == \
+                store.delta_bytes(k), (rec, store.delta_bytes(k))
+
+
+def assert_ledger_matches_residency(store, boot_rung=0):
+    """Net ledgered traffic == the delta bytes resident beyond the boot
+    residency - across ANY fault/switch history.
+
+    ``pager.resident_bytes()`` won't do here: an InMemoryPager counts
+    its whole backing set, not what the store spliced in.  ``boot_rung``
+    is the uniform rung the store booted at (0 for mode="part", which
+    every current caller uses; the parameter exists so full-boot stores
+    can assert the same invariant)."""
+    streams, rungs = store.leaf_streams(), store.leaf_rungs()
+    resident = sum(sum(streams[p][1:1 + r]) for p, r in rungs.items())
+    boot = sum(sum(streams[p][1:1 + boot_rung]) for p in rungs)
+    net = store.ledger.page_in_bytes - store.ledger.page_out_bytes
+    assert net == resident - boot, (net, resident, boot)

@@ -29,6 +29,9 @@ from repro.core import NestQuantStore
 from repro.models import make_model
 from repro.storage.pager import InMemoryPager
 
+from conftest import (assert_ledger_matches_residency,
+                       assert_switch_records_exact)
+
 
 @pytest.fixture(scope="module")
 def tree():
@@ -278,17 +281,6 @@ def _snapshot(store):
             store.pager.resident_bytes())
 
 
-def _assert_ledger_matches_residency(store):
-    # booted at rung 0 with no deltas resident, so net ledgered traffic
-    # must equal the delta bytes now spliced in - across any fault
-    # history (pager.resident_bytes() won't do: an InMemoryPager counts
-    # its whole backing set)
-    streams, rungs = store.leaf_streams(), store.leaf_rungs()
-    resident = sum(sum(streams[p][1:1 + r]) for p, r in rungs.items())
-    net = store.ledger.page_in_bytes - store.ledger.page_out_bytes
-    assert net == resident
-
-
 def test_rollback_invariant_over_seeded_fault_schedules(tree):
     """25 random fault schedules x a rung walk each: every failed switch
     leaves the store bit-identical, every committed one ledgers exactly."""
@@ -312,7 +304,7 @@ def test_rollback_invariant_over_seeded_fault_schedules(tree):
             else:
                 committed += 1
                 assert store.rung == target
-            _assert_ledger_matches_residency(store)
+            assert_ledger_matches_residency(store)
     # the sweep exercised BOTH branches, or it proves nothing
     assert committed > 0 and failed > 0, (committed, failed)
 
@@ -380,10 +372,8 @@ def test_scheduler_completes_every_request_through_a_storm():
         # zero dropped requests, full token budget each, exact ledgering
         assert len(report.requests) == 48
         assert all(len(r.request.out_tokens) == 2 for r in report.requests)
-        for rec in report.switch_records:
-            assert rec["page_in"] == rec["expected_in"], rec
-            assert rec["page_out"] == rec["expected_out"], rec
-        _assert_ledger_matches_residency(store)
+        assert_switch_records_exact(report.switch_records)
+        assert_ledger_matches_residency(store)
         return eng.stats.switch_failures
 
     # every seeded storm serves everything; some storm fails a switch

@@ -16,6 +16,8 @@ from repro.configs import get_config
 from repro.core import NestQuantStore
 from repro.models import make_model
 
+from conftest import assert_switch_records_exact
+
 N_REPLICAS = 4
 REQUESTS = 8
 
@@ -227,6 +229,9 @@ def test_fleet_ledgers_exact_under_chaos(fleet_run):
     fleet, report = fleet_run
     assert report.verify_ledgers() == sum(
         len(r.switch_records) for r in report.replicas.values()) > 0
+    # same contract through the shared helper (per-leaf moves, no store)
+    for rep in report.replicas.values():
+        assert_switch_records_exact(rep.switch_records)
     # the storm ran where the specs put it: replicas 0 and 2 only
     assert fleet.replicas[0].chaos is not None
     assert fleet.replicas[1].chaos is None

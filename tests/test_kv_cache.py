@@ -1,0 +1,351 @@
+"""Nested KV cache tests (DESIGN.md Sec. 16).
+
+Exactness: the KV quantize -> pack -> page -> render pipeline must be
+BIT-EXACT against the raw chain_decompose/chain_recompose ladder at
+every rung, over every <=4-rung chain x INT-8/6 top codes (the KV
+mirror of tests/test_ladder.py).  Ledger: every KV rung switch observed
+== metadata-computed bytes(delta_k), per event.  Faults: a corrupted KV
+stream quarantines and lowers ONLY the cache rung ceiling - decode
+state (the rendered values at the surviving rung) is bit-identical
+before and after the failed upgrade.  Kernel: the Pallas int32 QK^T
+kernel is bit-exact against its jnp reference at every rung (the CPU
+interpreter-mode CI job runs the `kernel or parity` selection here).
+"""
+import itertools
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.api import (ChaosPager, CorruptStreamError, InMemoryPager,
+                       KVCacheConfig, NestedKVCache, ResilientPager,
+                       RetryPolicy, dense_kv_bytes_per_token,
+                       kv_bytes_per_token, kv_stream_widths)
+from repro.core import packing
+from repro.core.decompose import (chain_decompose, chain_recompose,
+                                  int_range, normalize_bits)
+from repro.serving.kv_cache import _quantize_kv, _render_kv
+
+from conftest import assert_switch_records_exact
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:          # property tests need requirements-dev.txt
+    HAS_HYPOTHESIS = False
+
+PAGE = 4
+
+
+def _all_chains(n, max_len=4):
+    """Every rung chain topping out at n with lower rungs in [2, n)."""
+    lowers = range(2, n)
+    for r in range(1, max_len):
+        for combo in itertools.combinations(lowers, r):
+            yield tuple(sorted(combo)) + (n,)
+
+
+def _slab_covering_all_codes(n, page=PAGE):
+    """A (1, 1, S, 1, hd) slab whose quantized codes sweep ALL signed
+    INT-n values: per-position amax is pinned by a sentinel so
+    round(x / scale) reproduces the intended code exactly."""
+    lo, hi = int_range(n)
+    codes = np.arange(lo, hi + 1, dtype=np.int32)
+    pos = int(np.ceil(len(codes) / 7)) * page        # page multiple
+    grid = np.zeros((pos, 8), np.float32)
+    grid[:, 0] = hi                                   # sentinel pins amax
+    flat = grid[:, 1:].reshape(-1)
+    flat[:len(codes)] = codes
+    return jnp.asarray(grid.reshape(1, 1, pos, 1, 8))
+
+
+@pytest.mark.parametrize("n", [8, 6])
+def test_every_kv_chain_renders_exactly_at_every_rung(n):
+    """ALL signed INT-n codes through ALL <=4-rung KV chains: the paged
+    pipeline (quantize -> chain split -> pack -> unpack -> recompose ->
+    dequant) must land bit-exactly on the raw ladder's dequant at EVERY
+    rung - pack_blocked is exact-bit storage, not approximation."""
+    slab = _slab_covering_all_codes(n)
+    for chain in _all_chains(n):
+        bits = normalize_bits(chain)
+        streams, scale = _quantize_kv(slab, bits=bits, page=PAGE,
+                                      rounding="rtn")
+        # reference: the same split straight from decompose, no packing
+        lo, hi = int_range(n)
+        x = np.asarray(slab, np.float32)
+        ref_scale = np.maximum(np.max(np.abs(x), -1, keepdims=True),
+                               1e-8) / hi
+        codes = jnp.asarray(np.clip(np.round(x / ref_scale), lo, hi)
+                            .astype(np.int32))
+        base, deltas = chain_decompose(codes, bits, method="rtn")
+        np.testing.assert_array_equal(np.asarray(scale), ref_scale)
+        for r in range(len(bits)):
+            got = _render_kv(tuple(streams[:1 + r]), scale, bits=bits,
+                             page=PAGE, rung=r)
+            want = (np.asarray(chain_recompose(base, deltas, bits, rung=r),
+                               np.float32)
+                    * ref_scale * 2.0 ** (bits[-1] - bits[r]))
+            np.testing.assert_array_equal(np.asarray(got), want,
+                                          err_msg=f"chain {bits} rung {r}")
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(data=st.data())
+    def test_random_kv_chain_random_slab_renders_exactly(data):
+        n = data.draw(st.sampled_from([8, 6, 5]), label="n")
+        lowers = data.draw(
+            st.sets(st.integers(2, n - 1), min_size=1, max_size=3),
+            label="lowers")
+        bits = tuple(sorted(lowers)) + (n,)
+        rounding = data.draw(
+            st.sampled_from(["bitshift", "rtn", "adaptive"]),
+            label="rounding")
+        pages = data.draw(st.integers(1, 3), label="pages")
+        seed = data.draw(st.integers(0, 2 ** 16), label="seed")
+        slab = jax.random.normal(jax.random.PRNGKey(seed),
+                                 (2, 1, pages * PAGE, 2, 8), jnp.float32)
+        streams, scale = _quantize_kv(slab, bits=bits, page=PAGE,
+                                      rounding=rounding)
+        # the top rung must reproduce the INT-n codes exactly
+        lo, hi = int_range(n)
+        codes = np.clip(np.round(np.asarray(slab) / np.asarray(scale)),
+                        lo, hi).astype(np.int32)
+        top = _render_kv(streams, scale, bits=bits, page=PAGE,
+                         rung=len(bits) - 1)
+        np.testing.assert_array_equal(
+            np.asarray(top), codes * np.asarray(scale, np.float32))
+else:
+    @pytest.mark.skip(reason="property tests need hypothesis "
+                      "(pip install -r requirements-dev.txt)")
+    def test_random_kv_chain_random_slab_renders_exactly():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# paged cache: ledger exactness on every switch
+# ---------------------------------------------------------------------------
+@pytest.fixture()
+def cache():
+    kv = NestedKVCache(KVCacheConfig(bits=(3, 5, 8), page=PAGE))
+    key = jax.random.PRNGKey(0)
+    k = jax.random.normal(key, (2, 2, 4 * PAGE, 2, 8), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 1), k.shape, jnp.float32)
+    kv.ingest(k, v)
+    return kv, k, v
+
+
+def test_every_kv_switch_ledgers_exactly(cache):
+    """A full down-and-up walk: every event's observed bytes equal the
+    metadata-computed per-page stream bytes, and the expected_events
+    mirror carries the same numbers (the scheduler's record source)."""
+    kv, _, _ = cache
+    assert kv.rung == 2 and len(kv.pages) == 4
+    kv.to_rung(0)
+    kv.to_rung(2)
+    assert [e[:2] for e in kv.ledger.events] == \
+        [(2, 1), (1, 0), (0, 1), (1, 2)]
+    for (f, t, pin, pout), (ef, et, ein, eout) in zip(
+            kv.ledger.events, kv.expected_events):
+        assert (f, t, pin, pout) == (ef, et, ein, eout)
+        lvl = min(f, t)
+        assert pin + pout == kv.delta_bytes(lvl) == \
+            2 * len(kv.pages) * kv.stream_bytes(1 + lvl)
+    # the shared exactness helper sees the same contract
+    assert_switch_records_exact(
+        [{"page_in": pin, "page_out": pout, "expected_in": ein,
+          "expected_out": eout}
+         for (_, _, pin, pout), (_, _, ein, eout) in
+         zip(kv.ledger.events, kv.expected_events)])
+    # net traffic is zero after the round trip; residency is back at top
+    assert kv.ledger.page_in_bytes == kv.ledger.page_out_bytes
+    assert kv.resident_bytes() == kv.rung_resident_bytes(2)
+
+
+def test_kv_render_matches_at_every_rung_after_switching(cache):
+    """Rendered values at rung r are identical whether r was reached by
+    never leaving it or by a down-and-up walk through the pager."""
+    kv, _, _ = cache
+    before = {r: kv.render(r) for r in range(3)}
+    kv.to_rung(0)
+    kv.to_rung(2)
+    for r in range(3):
+        after = kv.render(r)
+        for a, b in zip(before[r], after):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_kv_render_never_fetches_above_rung(cache):
+    kv, _, _ = cache
+    kv.to_rung(1)
+    with pytest.raises(ValueError, match="never fetches"):
+        kv.render(2)
+
+
+def test_kv_rewind_drops_pages_without_fetching(cache):
+    """The speculative hook: rewind retires pages past the position with
+    ZERO pager fetches even when deltas are paged out."""
+    kv, _, _ = cache
+
+    class CountingPager:
+        def __init__(self, inner):
+            self.inner, self.fetches = inner, 0
+
+        def fetch(self, path, level):
+            self.fetches += 1
+            return self.inner.fetch(path, level)
+
+        def __getattr__(self, name):
+            return getattr(self.inner, name)
+
+    kv.to_rung(0)                       # deltas paged out
+    kv.pager = CountingPager(kv.pager)
+    assert kv.rewind(2 * PAGE) == 2     # pages 2,3 dropped
+    assert kv.pager.fetches == 0
+    assert [pg.index for pg in kv.pages] == [0, 1]
+    assert kv.rewound_pages == 2
+    k0, _ = kv.render()
+    assert k0.shape[2] == 2 * PAGE      # surviving span still renders
+
+
+def test_kv_bytes_metadata_consistent(cache):
+    kv, _, _ = cache
+    cfg = kv.config
+    per_tok = kv_bytes_per_token(cfg, kv.rung, 2, 2, 8)
+    # pages hold 4*PAGE positions; metadata prices the same bytes the
+    # cache reports as resident, minus nothing (batch B=2 multiplies)
+    assert kv.resident_bytes() == per_tok * 4 * PAGE * 2
+    # compression ordering needs a word-aligned page: at page=32 each
+    # component plane packs to exactly its bit width per position (the
+    # tiny page=4 fixture pads every plane to a full 32-bit word), and
+    # the nested top rung undercuts even the bf16 dense baseline
+    c32 = KVCacheConfig(bits=cfg.bits, page=32)
+    assert kv_bytes_per_token(c32, 0, 2, 2, 64) < \
+        kv_bytes_per_token(c32, 2, 2, 2, 64) < \
+        dense_kv_bytes_per_token(2, 2, 64)
+    assert kv_stream_widths(cfg.bits) == (3, 3, 4)
+
+
+# ---------------------------------------------------------------------------
+# corrupted stream: quarantine lowers the cache rung, never decode state
+# ---------------------------------------------------------------------------
+def test_corrupt_kv_stream_quarantines_only_the_cache_rung():
+    """An always-corrupting link under the cache: the upgrade fails with
+    CorruptStreamError, the stream is quarantined (max_available_rung
+    drops), and the surviving rung's rendered values are BIT-IDENTICAL
+    to before the attempt - the failure fenced off cache residency,
+    not decode state."""
+    kv = NestedKVCache(KVCacheConfig(bits=(4, 8), page=PAGE))
+    key = jax.random.PRNGKey(3)
+    k = jax.random.normal(key, (2, 1, 2 * PAGE, 2, 8), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 1), k.shape, jnp.float32)
+    kv.ingest(k, v)
+    kv.to_rung(0)                                # delta 0 lives in the pager
+    before = kv.render()
+    ledger_before = list(kv.ledger.events)
+
+    kv.pager = ResilientPager(
+        ChaosPager(kv.pager, seed=0, p_corrupt=1.0),
+        RetryPolicy(max_attempts=2, backoff_base_s=0.0, jitter=0.0,
+                    quarantine_after=1))
+    with pytest.raises(CorruptStreamError):
+        kv.to_rung(1)
+    # rung and ledger untouched by the failed, rolled-back step
+    assert kv.rung == 0
+    assert kv.ledger.events == ledger_before
+    # the poisoned link fences the upgrade path off
+    assert kv.max_available_rung() == 0
+    # decode state: the surviving rung renders bit-identically
+    after = kv.render()
+    for a, b in zip(before, after):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # healing the link restores the ceiling and the upgrade ledgers exactly
+    kv.pager = kv.pager.inner.inner
+    assert kv.max_available_rung() == 1
+    kv.to_rung(1)
+    f, t, pin, pout = kv.ledger.events[-1]
+    assert (f, t, pout) == (0, 1, 0)
+    assert pin == 2 * len(kv.pages) * kv.stream_bytes(1)
+
+
+# ---------------------------------------------------------------------------
+# kernel parity: Pallas interpret mode vs jnp reference vs dense oracle
+# ---------------------------------------------------------------------------
+def _packed(x, bits, page):
+    lo, hi = int_range(bits[-1])
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / hi
+    codes = jnp.clip(jnp.round(x / scale), lo, hi).astype(jnp.int32)
+    base, deltas = chain_decompose(codes, bits, "rtn")
+    streams = tuple(packing.pack_blocked(c, w, page, axis=1)
+                    for c, w in zip((base, *deltas), kv_stream_widths(bits)))
+    return streams, scale
+
+
+@pytest.mark.parametrize("bits", [(4, 8), (4, 6, 8), (3, 5, 6, 8)])
+def test_kernel_bit_exact_vs_ref_at_every_rung(bits):
+    from repro.kernels.nested_attention import ref
+    from repro.kernels.nested_attention.kernel import nested_qk
+    from repro.kernels.nested_attention.ops import quantize_q
+
+    key = jax.random.PRNGKey(7)
+    q = jax.random.normal(key, (3, 4, 16), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (3, 4 * PAGE, 16),
+                          jnp.float32)
+    streams, _ = _packed(k, bits, PAGE)
+    qc, _ = quantize_q(q, bits[-1])
+    for rung in range(len(bits)):
+        res = bits[:1 + rung]
+        got = nested_qk(qc, streams[:1 + rung], bits=res, page=PAGE,
+                        interpret=True)
+        want = ref.nested_qk_ref(qc, streams[:1 + rung], bits=res,
+                                 page=PAGE)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=f"bits {bits} rung {rung}")
+        assert got.dtype == jnp.int32
+
+
+def test_attention_parity_improves_with_rung():
+    """Full nested attention vs the dense f32 oracle: pinned error per
+    rung, strictly shrinking as delta streams become resident."""
+    from repro.kernels.nested_attention import nested_attention, ref
+
+    bits, tol = (4, 6, 8), {0: 0.2, 1: 0.05, 2: 0.02}
+    key = jax.random.PRNGKey(11)
+    q = jax.random.normal(key, (4, 8, 16), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (4, 8 * PAGE, 16),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), k.shape, jnp.float32)
+    ks, k_scale = _packed(k, bits, PAGE)
+    vs, v_scale = _packed(v, bits, PAGE)
+    dense = ref.dense_attention_ref(q, k, v)
+    prev = None
+    for rung in range(len(bits)):
+        out = nested_attention(q, ks[:1 + rung], k_scale, vs[:1 + rung],
+                               v_scale, bits=bits, page=PAGE, rung=rung,
+                               interpret=True)
+        rel = float(jnp.linalg.norm(out - dense) / jnp.linalg.norm(dense))
+        assert rel < tol[rung], (rung, rel)
+        if prev is not None:
+            assert rel < prev
+        prev = rel
+
+
+def test_kernel_single_stream_rung0_parity():
+    """Rung 0 is the one-stream special case (no recompose): kernel and
+    reference must agree there too (normalize_bits rejects single-entry
+    chains, so the kernel carries its own resident-bits check)."""
+    from repro.kernels.nested_attention import ref
+    from repro.kernels.nested_attention.kernel import nested_qk
+    from repro.kernels.nested_attention.ops import quantize_q
+
+    key = jax.random.PRNGKey(13)
+    q = jax.random.normal(key, (2, 4, 8), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 2 * PAGE, 8),
+                          jnp.float32)
+    streams, _ = _packed(k, (6, 8), PAGE)
+    qc, _ = quantize_q(q, 8)
+    got = nested_qk(qc, streams[:1], bits=(6,), page=PAGE, interpret=True)
+    want = ref.nested_qk_ref(qc, streams[:1], bits=(6,), page=PAGE)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

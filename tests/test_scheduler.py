@@ -14,6 +14,8 @@ from repro.serving import (HysteresisPolicy, LoadAdaptivePolicy,
                            ResourceSignal, Scheduler, ServeEngine,
                            ServiceModel)
 
+from conftest import assert_switch_records_exact
+
 N_REQUESTS = 64
 MAX_BATCH = 4
 NEW_TOKENS = 2
@@ -116,13 +118,9 @@ def test_burst_triggers_downshift_then_recovery(burst_run):
 def test_scheduled_switches_page_exact_delta_bytes(burst_run):
     store, engine, trace, report = burst_run
     assert len(report.switch_records) >= 2       # at least down + up
-    for rec in report.switch_records:
-        assert rec["page_in"] == rec["expected_in"], rec
-        assert rec["page_out"] == rec["expected_out"], rec
-        # uniform adjacent moves: the tree-wide Table-11 quantum exactly
-        assert abs(rec["from_rung"] - rec["to_rung"]) == 1, rec
-        k = min(rec["from_rung"], rec["to_rung"])
-        assert rec["page_in"] + rec["page_out"] == store.delta_bytes(k), rec
+    # observed == computed per decision, and (uniform adjacent moves)
+    # each totals the tree-wide Table-11 quantum exactly
+    assert_switch_records_exact(report.switch_records, store=store)
     # and nothing moved outside scheduled decisions
     assert store.ledger.page_in_bytes == report.page_in_bytes
     assert store.ledger.page_out_bytes == report.page_out_bytes

@@ -152,3 +152,70 @@ def test_warmup_kills_rung_switch_retrace():
                      speculate=spec)
         eng.generate(_reqs(cfg, 2, seed=30 + rung, new_tokens=4))
     assert traces == snap, f"retraced after warmup: was {snap}, now {traces}"
+
+
+class _JointPin:
+    """Policy pinning BOTH halves of the joint rung state: ``decide``
+    serves the weight rung, ``kv_decide`` the cache rung (the engine
+    clamps + applies it through the ledgered walk)."""
+
+    def __init__(self, weight_rung, kv_rung):
+        self.weight_rung, self.kv_rung = weight_rung, kv_rung
+
+    def decide(self, store, signal):
+        from repro.serving.policies import RungAssignment
+        return RungAssignment.uniform(self.weight_rung)
+
+    def kv_decide(self, kv, signal):
+        return self.kv_rung
+
+
+def test_warmup_kills_kv_rung_switch_retrace():
+    """Satellite of DESIGN.md Sec. 16: warmup() covers every
+    (weight-rung x KV-rung x prompt shape) the serve loop dispatches -
+    a KV cache rung switch AFTER warmup must add ZERO new jit traces,
+    on the model dispatches AND on the KV quantize/render pipeline."""
+    from repro.core.recipe import QuantRecipe, quantize
+    from repro.serving import KVCacheConfig, NestedKVCache
+    from repro.serving.kv_cache import KV_TRACES
+
+    cfg = get_config("qwen2-1.5b").reduced()
+    model = make_model(cfg)
+    traces = {"prefill": 0, "decode": 0, "chunk": 0}
+
+    def counting(fn, key):
+        def inner(*a, **kw):            # body runs once per jax TRACE
+            traces[key] += 1
+            return fn(*a, **kw)
+        return inner
+
+    counted = model._replace(
+        prefill=counting(model.prefill, "prefill"),
+        decode_step=counting(model.decode_step, "decode"),
+        decode_chunk=counting(model.decode_chunk, "chunk"))
+    compiled = (jax.jit(counted.prefill),
+                jax.jit(counted.decode_step, donate_argnums=(2,)),
+                jax.jit(counted.decode_chunk, donate_argnums=(2,)))
+    params = model.init(jax.random.PRNGKey(0))
+    nested = quantize(params, QuantRecipe(bits=(8, 6, 4)))
+    store = NestQuantStore(nested, mode="part", dtype=jnp.float32)
+    kv = NestedKVCache(KVCacheConfig(bits=(4, 8), page=4))
+    eng = ServeEngine(cfg, store, max_batch=2, max_len=48,
+                      policy=_JointPin(0, kv.rung), model=counted,
+                      compiled=compiled, kv=kv)
+    eng.warmup(6, batch=2)
+    assert sum(traces.values()) > 0
+    assert KV_TRACES["quantize"] > 0 and KV_TRACES["render"] > 0
+    snap, kv_snap = dict(traces), dict(KV_TRACES)
+
+    # joint walk over rung pairs never served before: cache downshift,
+    # re-climb, and weight+KV moving in the same step - zero retraces.
+    switches0 = eng.stats.kv_switches
+    for wr, kr in ((0, 0), (1, 1), (2, 0), (0, 1)):
+        eng.policy = _JointPin(wr, kr)
+        eng.generate(_reqs(cfg, 2, seed=40 + 2 * wr + kr, new_tokens=3))
+        assert kv.rung == kr            # the switch genuinely committed
+    assert eng.stats.kv_switches >= switches0 + 4
+    assert traces == snap, f"retraced after warmup: was {snap}, now {traces}"
+    assert KV_TRACES == kv_snap, \
+        f"KV pipeline retraced after warmup: was {kv_snap}, now {KV_TRACES}"

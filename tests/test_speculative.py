@@ -154,6 +154,47 @@ def test_spec_floor_draft_uses_quality_floor_policy():
     assert out == [r.out_tokens for r in eng.generate(_reqs(2, seed=6))]
 
 
+# -- nested KV cache x speculation (DESIGN.md Sec. 16) -----------------------
+def test_spec_bit_identical_at_downshifted_kv_rung():
+    """Sec. 16 meets Sec. 15: with the nested KV cache DOWNSHIFTED to
+    the base rung, speculative decode emits EXACTLY the tokens plain
+    decode emits at that same cache rung - and the per-round verify
+    rewinds never re-fetch the paged-out cache deltas (drafting and
+    rewinding work on what is resident, by construction)."""
+    from repro.serving import KVCacheConfig, NestedKVCache
+
+    class CountingPager:
+        def __init__(self, inner):
+            self.inner, self.fetches = inner, 0
+
+        def fetch(self, path, level):
+            self.fetches += 1
+            return self.inner.fetch(path, level)
+
+        def __getattr__(self, name):
+            return getattr(self.inner, name)
+
+    kv = NestedKVCache(KVCacheConfig(bits=(4, 8), page=2))
+    nested = quantize(PARAMS, QuantRecipe(bits=(8, 4)))
+    store = NestQuantStore(nested, mode="full", dtype=jnp.float32)
+    eng = ServeEngine(CFG, store, max_batch=2, max_len=48,
+                      policy=StaticRungPolicy(-1), kv=kv)
+    # seed pages at the top rung so the downshift has deltas to evict,
+    # then pin the cache at rung 0: deltas stay paged OUT from here on
+    # (StaticRungPolicy has no kv_decide, so the engine leaves it alone).
+    eng.generate(_reqs(2, seed=7))
+    kv.to_rung(0)
+    counting = CountingPager(kv.pager)
+    kv.pager = counting
+    plain = [r.out_tokens for r in eng.generate(_reqs(2, seed=7))]
+    assert kv.rung == 0 and eng.stats.kv_pages > 0
+    out = [r.out_tokens for r in
+           eng.generate(_reqs(2, seed=7), speculate=SpecConfig(k=3, draft=0))]
+    assert out == plain                # bit-identical at the low cache rung
+    assert eng.last_profile.speculative
+    assert counting.fetches == 0       # rewind/verify re-fetched NOTHING
+
+
 # -- guards ------------------------------------------------------------------
 def test_spec_guards():
     eng = _engine((8, 4), max_len=16)

@@ -20,6 +20,8 @@ from repro.core import NestQuantStore
 from repro.core.nesting import NestedTensor, nest_quantize
 from repro.models import make_model
 
+from conftest import assert_ledger_matches_residency
+
 RECIPE = QuantRecipe(bits=(8, 4), overrides=(
     LayerOverride(pattern=r"\['deep'\]", bits=(8, 6, 4)),
     LayerOverride(pattern=r"\['emb'\]", dense=True),
@@ -134,6 +136,8 @@ def _drive(store):
     store.to_part()
     store.apply(RungAssignment(default=0, overrides=((r"\['deep'\]", -1),)))
     store.apply(RungAssignment(default=0))
+    # after every schedule, net ledgered traffic == spliced-in residency
+    assert_ledger_matches_residency(store)
     return store.ledger
 
 
@@ -264,6 +268,7 @@ def test_failed_upgrade_rolls_back_to_consistent_state(staged_dir, art_dir):
     assert store.rung == 1
     assert [e[:2] for e in store.ledger.events] == [(0, 1)]
     assert store.pager.resident_bytes() == store.delta_bytes(0)
+    assert_ledger_matches_residency(store)
     # once the segment lands, the same climb completes exactly
     shutil.copy(os.path.join(art_dir, "delta_1.seg"), staged_dir)
     store.to_full()
